@@ -1,0 +1,80 @@
+"""Microbenchmarks for the jnp reference paths that back each Pallas kernel
+(interpret-mode Pallas is not a timing proxy; these time the oracle compute
+the kernels replace, giving a CPU cost baseline per record/token).
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _time(f, *args, n=5) -> float:
+    f(*args)[0].block_until_ready() if isinstance(f(*args), tuple) else \
+        f(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = f(*args)
+        (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / n
+
+
+def bench_attention() -> Dict[str, float]:
+    from repro.models.attention import attend_chunked, attend_full
+    key = jax.random.PRNGKey(0)
+    b, h, s, d = 1, 8, 2048, 64
+    q = jax.random.normal(key, (b, s, h, d), jnp.bfloat16)
+    k = jax.random.normal(key, (b, s, h, d), jnp.bfloat16)
+    v = jax.random.normal(key, (b, s, h, d), jnp.bfloat16)
+    full = jax.jit(lambda *a: attend_full(*a, causal=True))
+    chunked = jax.jit(lambda *a: attend_chunked(*a, causal=True))
+    return {"attend_full_us": _time(full, q, k, v) * 1e6,
+            "attend_chunked_us": _time(chunked, q, k, v) * 1e6}
+
+
+def bench_gla() -> Dict[str, float]:
+    from repro.models.gla import gla_chunk
+    key = jax.random.PRNGKey(0)
+    b, s, h, dk = 1, 2048, 8, 64
+    q = jax.random.normal(key, (b, s, h, dk), jnp.float32)
+    lw = -jnp.exp(jax.random.normal(key, (b, s, h, dk)))
+    f = jax.jit(lambda q_, k_, v_, w_: gla_chunk(q_, k_, v_, w_)[0])
+    return {"gla_chunk_us": _time(f, q, q, q, lw) * 1e6}
+
+
+def bench_hash_join() -> Dict[str, float]:
+    from repro.core.cache import InMemoryTable, lookup_ref
+    rng = np.random.default_rng(0)
+    tbl = InMemoryTable(8192)
+    keys = rng.choice(10**6, 4096, replace=False).astype(np.int64)
+    tbl.upsert(keys, rng.normal(size=(4096, 8)).astype(np.float32),
+               np.arange(4096, dtype=np.int64))
+    kt, vt, tt = tbl.device_state()
+    q = jnp.asarray(rng.choice(keys, 4096), jnp.int32)
+    t = _time(lambda *a: lookup_ref(*a)[0], q, kt, vt, tt)
+    return {"hash_join_us": t * 1e6,
+            "hash_join_ns_per_probe": t / 4096 * 1e9}
+
+
+def bench_transform() -> Dict[str, float]:
+    from repro.core.transformer import transform_kernel
+    from repro.core.cache import InMemoryTable
+    rng = np.random.default_rng(0)
+    eq, qu = InMemoryTable(4096), InMemoryTable(4096)
+    eq.upsert(np.arange(20, dtype=np.int64),
+              rng.normal(size=(20, 8)).astype(np.float32),
+              np.arange(20, dtype=np.int64))
+    qu.upsert(np.arange(4096, dtype=np.int64),
+              rng.normal(size=(4096, 8)).astype(np.float32),
+              np.arange(4096, dtype=np.int64))
+    prod = np.abs(rng.normal(size=(4096, 8))).astype(np.float32)
+    prod[:, 0] = np.arange(4096)
+    prod[:, 1] = np.arange(4096) % 20
+    t = _time(lambda p: transform_kernel(p, *eq.device_state(),
+                                         *qu.device_state())[0],
+              jnp.asarray(prod))
+    return {"transform_us_per_4096": t * 1e6,
+            "transform_records_s": 4096 / t}

@@ -1,0 +1,228 @@
+"""One benchmark per paper table/figure (real measurements on this host).
+
+  table2_baseline   — §4.1.1 / Table 2: Stream Processor with vs without
+                      DOD-ETL (records/s; paper: 10,090 vs 1,230 = 8.2x)
+  fig4_init         — Fig. 4: per-worker In-memory cache dump overhead
+  fig5_listener     — Fig. 5: Listener scalability, both experiments
+                      (grow-log vs fixed-log; saturation by shared log scan)
+  fig6_processor    — Fig. 6: Stream Processor scaling with workers
+                      (measured per-partition cost, barrier model)
+  table2_fault      — §4.1.3: 5 -> 3 workers mid-run, throughput + zero
+                      consistency errors
+  table2_production — §4.1.4: simple vs ISA-95-complex data model
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.configs.dod_etl import steelworks_config
+from repro.core import (BaselineStreamProcessor, DODETLPipeline,
+                        SourceDatabase)
+from repro.data.sampler import SamplerConfig, SteelworksSampler
+from repro.runtime.cluster import SimulatedCluster
+
+
+def _mk(n_records=20_000, n_partitions=20, n_workers=10, late=0.02,
+        complex_model=False, join_depth=1, seed=0):
+    cfg = steelworks_config(n_partitions=n_partitions,
+                            complex_model=complex_model)
+    src = SourceDatabase()
+    SteelworksSampler(cfg, SamplerConfig(
+        records_per_table=n_records, n_equipment=n_partitions,
+        late_master_frac=late, seed=seed)).generate(src)
+    pipe = DODETLPipeline(cfg, src, n_workers=n_workers,
+                          join_depth=join_depth)
+    return cfg, src, pipe
+
+
+def table2_baseline(n_records=20_000) -> Dict[str, float]:
+    """DOD-ETL vs unmodified stream processor, same workload + KPIs."""
+    cfg, src, pipe = _mk(n_records)
+    pipe.extract()
+    pipe.bootstrap_caches()
+    t0 = time.perf_counter()
+    done = pipe.run_to_completion()
+    dod_s = time.perf_counter() - t0
+    dod_rate = done / dod_s
+
+    # baseline: record-at-a-time + per-record source look-backs.
+    # Measured on a slice, rate extrapolates (cost is linear per record).
+    cfg2, src2, _ = _mk(n_records)
+    baseline = BaselineStreamProcessor(cfg2, src2)
+    prod_tid = [t.name for t in cfg2.tables].index("production")
+    batches = [b.filter(b.table_id == prod_tid) for b in src2.log._batches]
+    batches = [b for b in batches if len(b)]
+    slice_n = min(2_000, n_records)
+    t0 = time.perf_counter()
+    out_n = 0
+    for b in batches:
+        take = b if out_n + len(b) <= slice_n else b.take(
+            np.arange(slice_n - out_n))
+        facts = baseline.process(take)
+        out_n += len(facts)
+        if out_n >= slice_n:
+            break
+    base_s = time.perf_counter() - t0
+    base_rate = out_n / base_s
+    return {
+        "dodetl_records_s": round(dod_rate),
+        "baseline_records_s": round(base_rate),
+        "speedup": round(dod_rate / base_rate, 2),
+        "paper_speedup": 8.2,
+        "source_lookups_dodetl": src.lookup_count,
+        "source_lookups_baseline": src2.lookup_count,
+    }
+
+
+def fig4_init(n_workers=10, n_records=20_000) -> Dict[str, float]:
+    cfg, src, pipe = _mk(n_records, n_workers=n_workers)
+    pipe.extract()
+    dumps = []
+    for w in pipe.workers:
+        dumps.append(w.reset_caches(pipe.master_topic_map,
+                                    cfg.n_business_keys))
+    return {
+        "workers": n_workers,
+        "mean_dump_s": round(float(np.mean(dumps)), 4),
+        "max_dump_s": round(float(np.max(dumps)), 4),
+        "cv": round(float(np.std(dumps) / (np.mean(dumps) + 1e-12)), 3),
+    }
+
+
+def fig5_listener(max_tables=16, rows_per_table=2_000) -> List[Dict]:
+    """Two experiments over #tables: (a) grow-log — insertions only into
+    extracted tables; (b) fixed-log — 16 tables always inserted, extraction
+    count varies. Saturation mechanism: every Listener scans the SHARED log."""
+    from repro.configs.dod_etl import ETLConfig, TableConfig
+    from repro.core import MessageQueue
+    from repro.core.listener import ChangeTracker
+    from repro.core.records import make_batch
+
+    def run(n_tables: int, n_inserted: int) -> float:
+        tables = tuple(
+            TableConfig(f"t{i}", "operational", "id", "eq",
+                        tuple("abcdefgh")) for i in range(max_tables))
+        cfg = ETLConfig(tables=tables, n_partitions=4, n_business_keys=4)
+        src = SourceDatabase()
+        rng = np.random.default_rng(0)
+        for i in range(n_inserted):
+            ids = np.arange(rows_per_table, dtype=np.int64)
+            src.apply(make_batch(i, 0, ids, ids % 4, ids,
+                                 rng.normal(size=(rows_per_table, 8))))
+        queue = MessageQueue()
+        tracker = ChangeTracker(cfg, src.log, queue)
+        listeners = tracker.listeners[:n_tables]
+        t0 = time.perf_counter()
+        got = sum(l.poll() for l in listeners)
+        wall = time.perf_counter() - t0
+        return got / wall if wall > 0 else 0.0
+
+    rows = []
+    for n in (1, 2, 4, 8, 12, 16):
+        rows.append({
+            "tables": n,
+            "grow_log_records_s": round(run(n, n)),
+            "fixed_log_records_s": round(run(n, max_tables)),
+        })
+    return rows
+
+
+def fig6_processor(max_workers=20, n_partitions=20, n_records=20_000
+                   ) -> List[Dict]:
+    """Throughput vs workers; real per-partition costs, barrier model
+    (cluster time per round = max over worker walls, as a real barrier
+    would observe). Scaling saturates at #partitions, as in the paper."""
+    rows = []
+    for n_workers in (1, 2, 4, 8, 12, 16, 20):
+        cfg, src, pipe = _mk(n_records, n_partitions=n_partitions,
+                             n_workers=n_workers)
+        cluster = SimulatedCluster(pipe)
+        pipe.extract()
+        pipe.bootstrap_caches()
+        cluster.run_round(max_records_per_partition=50)   # jit warm-up
+        cluster.history.clear()
+        while True:
+            stats = cluster.run_round(max_records_per_partition=500)
+            if stats.records == 0:
+                break
+        h = [s for s in cluster.history if s.records]
+        recs = sum(s.records for s in h)
+        wall = sum(s.cluster_wall_s for s in h)
+        rows.append({"workers": n_workers,
+                     "records_s": round(recs / wall) if wall else 0})
+    return rows
+
+
+def table2_fault(n_records=20_000) -> Dict[str, float]:
+    """Both windows measure FULL rounds (fixed records/round) with warm jit,
+    so before/after rates are apples-to-apples; the re-dump cost is charged
+    to the post-failure window (the paper's §4.1.3 observation)."""
+    cap = 1_000
+    n_records = max(n_records, 40_000)
+    # join_depth=3 makes per-record compute dominate host overhead so the
+    # barrier model resolves the worker loss
+    cfg, src, pipe = _mk(n_records, n_partitions=10, n_workers=5,
+                         join_depth=3)
+    cluster = SimulatedCluster(pipe)
+    pipe.extract()
+    pipe.bootstrap_caches()
+    # warm-up (jit compilation) outside the measured window
+    cluster.run_round(max_records_per_partition=cap)
+    cluster.run_round(max_records_per_partition=cap)
+    cluster.history.clear()
+    for _ in range(4):
+        cluster.run_round(max_records_per_partition=cap)
+    # full-round size observed (hash skew can leave partitions empty)
+    quota = max(s.records for s in cluster.history)
+    bh = [s for s in cluster.history if s.records >= 0.9 * quota]
+    before = (sum(s.records for s in bh) /
+              sum(s.cluster_wall_s for s in bh))
+    cluster.fail_workers(["w1", "w3"])
+    n_before_fail = len(cluster.history)
+    while True:
+        stats = cluster.run_round(max_records_per_partition=cap)
+        if stats.records == 0:
+            break
+    after_h = [s for s in cluster.history[n_before_fail:]
+               if s.records >= 0.9 * quota] or \
+        [s for s in cluster.history[n_before_fail:] if s.records]
+    after = (sum(s.records for s in after_h) /
+             sum(s.cluster_wall_s + s.cache_redump_s for s in after_h))
+    # consistency: oracle single-worker run (same dataset size!)
+    cfg2, src2, pipe2 = _mk(n_records, n_partitions=10, n_workers=1,
+                            join_depth=3)
+    pipe2.extract()
+    pipe2.bootstrap_caches()
+    pipe2.run_to_completion()
+    a = pipe.warehouse.fact_table()
+    b = pipe2.warehouse.fact_table()
+    order = lambda t: t[np.lexsort((t[:, 1], t[:, 0]))]
+    consistent = (len(a) == len(b) and
+                  np.allclose(order(a), order(b), rtol=1e-5, atol=1e-5))
+    return {
+        "rate_before_records_s": round(before),
+        "rate_after_records_s": round(after),
+        "drop_pct": round(100 * (1 - after / before), 1),
+        "paper_drop_pct": 57.0,
+        "workers_removed_pct": 40.0,
+        "consistency_errors": 0 if consistent else -1,
+    }
+
+
+def table2_production(n_records=5_000) -> Dict[str, float]:
+    out = {}
+    for label, cmplx, depth in (("simple", False, 1), ("complex", True, 8)):
+        cfg, src, pipe = _mk(n_records, complex_model=cmplx,
+                             join_depth=depth, n_workers=10)
+        pipe.extract()
+        pipe.bootstrap_caches()
+        t0 = time.perf_counter()
+        done = pipe.run_to_completion()
+        out[f"{label}_records_s"] = round(done / (time.perf_counter() - t0))
+    out["slowdown_x"] = round(out["simple_records_s"] /
+                              max(out["complex_records_s"], 1), 1)
+    out["paper_slowdown_x"] = round(10_090 / 230, 1)
+    return out

@@ -1,0 +1,81 @@
+"""Roofline table builder: reads the dry-run artifacts in experiments/dryrun
+and emits the per-(arch x shape) three-term roofline table used by
+EXPERIMENTS.md §Roofline, plus the perf-iteration comparator.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.launch.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+
+def load_cells(out_dir: str = "experiments/dryrun", mesh: str = "pod"
+               ) -> List[Dict]:
+    rows = []
+    for f in sorted(glob.glob(os.path.join(out_dir, f"*__{mesh}.json"))):
+        d = json.load(open(f))
+        if d.get("status") != "ok":
+            continue
+        r = d.get("roofline", {})
+        mem = d.get("memory", {})
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "kind": d["kind"],
+            "t_compute_s": r.get("t_compute_s"),
+            "t_memory_s": r.get("t_memory_s"),
+            "t_collective_s": r.get("t_collective_s"),
+            "dominant": r.get("dominant"),
+            "bound_s": r.get("bound_s"),
+            "model_flops": d.get("model_flops"),
+            "model_flops_ratio": d.get("model_flops_ratio"),
+            "peak_gb": (mem.get("peak_estimate_bytes", 0) or 0) / 1e9,
+            "tokens_per_step": d.get("tokens_per_step"),
+            "compile_s": d.get("compile_s"),
+        })
+    return rows
+
+
+def roofline_fraction(row: Dict) -> Optional[float]:
+    """Useful-model-FLOPs utilization at the roofline bound: model_flops /
+    (bound_s * chips * peak). This is the §Perf score: 1.0 would mean the
+    step is compute-bound AND does zero non-model work."""
+    if not row.get("bound_s") or not row.get("model_flops"):
+        return None
+    return row["model_flops"] / (row["bound_s"] * 256 * PEAK_FLOPS_BF16)
+
+
+def format_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | t_comp(s) | t_mem(s) | t_coll(s) | dominant | "
+           "6ND/HLO | roofline-frac | peak GB/dev |")
+    sep = "|" + "---|" * 9
+    out = [hdr, sep]
+    for r in sorted(rows, key=lambda x: (x["arch"], x["shape"])):
+        rf = roofline_fraction(r)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{r['t_compute_s']:.3g} | {r['t_memory_s']:.3g} | "
+            f"{r['t_collective_s']:.3g} | {r['dominant']} | "
+            f"{(r['model_flops_ratio'] or 0):.2f} | "
+            f"{(rf or 0):.4f} | {r['peak_gb']:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    rows = load_cells()
+    print(format_table(rows))
+    print()
+    worst = sorted((r for r in rows if roofline_fraction(r)),
+                   key=roofline_fraction)[:3]
+    print("worst roofline fractions:",
+          [(r["arch"], r["shape"], round(roofline_fraction(r), 4))
+           for r in worst])
+    coll = sorted(rows, key=lambda r: -(r["t_collective_s"] or 0))[:3]
+    print("most collective-bound:",
+          [(r["arch"], r["shape"], round(r["t_collective_s"], 2))
+           for r in coll])
+
+
+if __name__ == "__main__":
+    main()

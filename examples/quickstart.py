@@ -1,0 +1,45 @@
+"""Quickstart: a complete DOD-ETL pipeline on synthetic steelworks data,
+end to end on CPU in under a minute.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs.dod_etl import steelworks_config
+from repro.core import DODETLPipeline, SourceDatabase
+from repro.data.sampler import SamplerConfig, SteelworksSampler
+
+
+def main():
+    # 1. a source database with a CDC log, fed by the plant simulator
+    cfg = steelworks_config(n_partitions=8)
+    source = SourceDatabase()
+    sampler = SteelworksSampler(cfg, SamplerConfig(
+        records_per_table=5_000, n_equipment=8, late_master_frac=0.05))
+    sampler.generate(source)
+    print(f"source: {source.log.size()} change records in the CDC log")
+
+    # 2. DOD-ETL: Change Tracker -> Message Queue -> Stream Processor
+    pipe = DODETLPipeline(cfg, source, n_workers=4)
+    extracted = pipe.extract()
+    dump_s = pipe.bootstrap_caches()
+    print(f"extracted {extracted} records (log-based CDC; "
+          f"{source.lookup_count} production-table queries)")
+    print(f"cache bootstrap: {dump_s * 1e3:.1f} ms (Fig. 4 overhead)")
+
+    # 3. stream to completion; late records ride the operational buffer
+    done = pipe.run_to_completion()
+    late = sum(w.transformer.records_late for w in pipe.workers)
+    print(f"transformed {done} facts ({late} arrived before their master "
+          f"data and were retried via the buffer)")
+
+    # 4. near-real-time OLAP: the star schema is queryable immediately
+    for eq in range(3):
+        kpis = pipe.warehouse.query_oee(eq)
+        print(f"  equipment {eq}: OEE={kpis['oee']:.3f} "
+              f"A={kpis['availability']:.3f} P={kpis['performance']:.3f} "
+              f"Q={kpis['quality']:.3f} ({int(kpis['rows'])} grains)")
+    print(f"warehouse rows: {pipe.warehouse.rows_loaded}; "
+          f"source look-backs by DOD-ETL: {source.lookup_count} (always 0)")
+
+
+if __name__ == "__main__":
+    main()

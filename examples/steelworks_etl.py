@@ -1,0 +1,66 @@
+"""The paper's case study (§4): OEE reporting for a steelworks, including
+the fault-tolerance drill (§4.1.3) and the ISA-95 complex-model comparison
+(§4.1.4).
+
+    PYTHONPATH=src python examples/steelworks_etl.py
+"""
+import time
+
+import numpy as np
+
+from repro.configs.dod_etl import steelworks_config
+from repro.core import DODETLPipeline, SourceDatabase
+from repro.data.sampler import SamplerConfig, SteelworksSampler
+from repro.runtime.cluster import SimulatedCluster
+
+
+def run_plant(complex_model: bool, join_depth: int, n=8_000):
+    cfg = steelworks_config(n_partitions=20, complex_model=complex_model)
+    src = SourceDatabase()
+    SteelworksSampler(cfg, SamplerConfig(
+        records_per_table=n, n_equipment=20)).generate(src)
+    pipe = DODETLPipeline(cfg, src, n_workers=5, join_depth=join_depth)
+    pipe.extract()
+    pipe.bootstrap_caches()
+    return cfg, pipe
+
+
+def main():
+    # ---- normal operation (simple process-specific model)
+    cfg, pipe = run_plant(False, 1)
+    cluster = SimulatedCluster(pipe, straggler_prob=0.1)
+    t0 = time.perf_counter()
+    for _ in range(4):
+        cluster.run_round(max_records_per_partition=100)
+    print(f"steady state: {cluster.throughput():,.0f} records/s "
+          f"on {len(pipe.workers)} workers "
+          f"({cluster.stragglers_mitigated} stragglers mitigated)")
+
+    # ---- §4.1.3 failure drill: two workers die mid-shift
+    redump = cluster.fail_workers(["w1", "w3"])
+    print(f"2/5 workers failed; partitions reassigned, caches re-dumped "
+          f"in {redump * 1e3:.1f} ms")
+    while cluster.run_round(max_records_per_partition=200).records:
+        pass
+    print(f"post-failure: {cluster.throughput():,.0f} records/s on "
+          f"{len(pipe.workers)} workers; stream completed, "
+          f"{pipe.warehouse.rows_loaded} facts loaded")
+
+    # ---- the BI deliverable: near-real-time OEE per equipment unit
+    worst = min(range(20), key=lambda e: pipe.warehouse.query_oee(e)["oee"])
+    k = pipe.warehouse.query_oee(worst)
+    print(f"lowest-OEE unit: #{worst} OEE={k['oee']:.3f} "
+          f"(A={k['availability']:.2f} P={k['performance']:.2f} "
+          f"Q={k['quality']:.2f}) -> maintenance ticket")
+
+    # ---- §4.1.4: the ISA-95 generalized model costs throughput
+    t0 = time.perf_counter()
+    cfg2, pipe2 = run_plant(True, 8, n=2_000)
+    done = pipe2.run_to_completion()
+    complex_rate = done / (time.perf_counter() - t0)
+    print(f"ISA-95-style normalized model: {complex_rate:,.0f} records/s "
+          f"(deep join chains; paper measured 10,090 -> 230)")
+
+
+if __name__ == "__main__":
+    main()

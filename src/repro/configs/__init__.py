@@ -1,0 +1,27 @@
+"""Architecture/config registry. Importing this package registers all
+assigned architectures plus the paper's own ETL config.
+"""
+from repro.configs.base import (  # noqa: F401
+    ModelConfig,
+    MoEConfig,
+    SSMConfig,
+    ShapeSuite,
+    SHAPE_SUITES,
+    REGISTRY,
+    get_config,
+    get_smoke_config,
+    list_archs,
+)
+from repro.configs import (  # noqa: F401
+    whisper_small,
+    internlm2_1_8b,
+    granite_20b,
+    starcoder2_7b,
+    deepseek_coder_33b,
+    qwen2_vl_7b,
+    rwkv6_7b,
+    phi3_5_moe,
+    qwen2_moe_a2_7b,
+    zamba2_1_2b,
+)
+from repro.configs.dod_etl import ETLConfig, TableConfig, steelworks_config  # noqa: F401

@@ -1,0 +1,37 @@
+"""deepseek-coder-33b [dense]: 62L d_model=7168 56H (GQA kv=8) d_ff=19200
+vocab=32256, llama-arch. [arXiv:2401.14196]
+"""
+from repro.configs.base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        arch="deepseek-coder-33b",
+        family="dense",
+        n_layers=62,
+        d_model=7168,
+        n_heads=56,
+        n_kv_heads=8,
+        d_ff=19200,
+        vocab=32256,
+        rope_theta=1e5,
+        source="arXiv:2401.14196",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        arch="deepseek-coder-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=56,
+        n_heads=7,              # mirrors the 56H/8kv ratio
+        n_kv_heads=1,
+        d_ff=112,
+        vocab=256,
+        microbatches=1,
+        remat=False,
+    )
+
+
+register("deepseek-coder-33b", full, smoke)

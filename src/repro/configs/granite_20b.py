@@ -1,0 +1,37 @@
+"""granite-20b [dense]: 52L d_model=6144 48H (MQA kv=1) d_ff=24576
+vocab=49152, llama-style, code. [arXiv:2405.04324]
+"""
+from repro.configs.base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        arch="granite-20b",
+        family="dense",
+        n_layers=52,
+        d_model=6144,
+        n_heads=48,
+        n_kv_heads=1,           # MQA
+        d_ff=24576,
+        vocab=49152,
+        rope_theta=1e4,
+        source="arXiv:2405.04324",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        arch="granite-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=1,
+        d_ff=128,
+        vocab=256,
+        microbatches=1,
+        remat=False,
+    )
+
+
+register("granite-20b", full, smoke)

@@ -1,0 +1,44 @@
+"""phi3.5-moe-42b-a6.6b [moe]: 32L d_model=4096 32H (GQA kv=8) d_ff=6400,
+16 experts top-2, vocab=32064. [hf:microsoft/Phi-3.5-MoE-instruct]
+"""
+from repro.configs.base import ModelConfig, MoEConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        arch="phi3.5-moe-42b-a6.6b",
+        family="moe",
+        n_layers=32,
+        d_model=4096,
+        n_heads=32,
+        n_kv_heads=8,
+        d_ff=6400,
+        vocab=32064,
+        rope_theta=1e4,
+        moe=MoEConfig(
+            n_experts=16,
+            top_k=2,
+            n_shared_experts=0,
+            d_ff_expert=6400,
+        ),
+        source="hf:microsoft/Phi-3.5-MoE-instruct",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        arch="phi3.5-moe-smoke",
+        family="moe",
+        n_layers=2,
+        d_model=64,
+        n_heads=4,
+        n_kv_heads=2,
+        d_ff=96,
+        vocab=256,
+        moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=96, group_size=64),
+        microbatches=1,
+        remat=False,
+    )
+
+
+register("phi3.5-moe-42b-a6.6b", full, smoke)

@@ -1,0 +1,37 @@
+"""starcoder2-7b [dense]: 32L d_model=4608 36H (GQA kv=4) d_ff=18432
+vocab=49152, RoPE. [arXiv:2402.19173]
+"""
+from repro.configs.base import ModelConfig, register
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        arch="starcoder2-7b",
+        family="dense",
+        n_layers=32,
+        d_model=4608,
+        n_heads=36,
+        n_kv_heads=4,
+        d_ff=18432,
+        vocab=49152,
+        rope_theta=1e5,
+        source="arXiv:2402.19173",
+    )
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        arch="starcoder2-smoke",
+        family="dense",
+        n_layers=2,
+        d_model=72,             # keeps the non-power-of-two flavour (36H/4kv)
+        n_heads=6,
+        n_kv_heads=2,
+        d_ff=144,
+        vocab=256,
+        microbatches=1,
+        remat=False,
+    )
+
+
+register("starcoder2-7b", full, smoke)

@@ -1,0 +1,27 @@
+"""DOD-ETL core: the paper's contribution as a composable library.
+
+Change Tracker (cdc + listener) -> Message Queue (partitioned topics with
+compaction) -> Stream Processor (In-memory Table Updater = cache, Data
+Transformer = transformer + buffer, Target Database Updater = loader),
+wired by pipeline; baseline is the unmodified-framework comparison point.
+"""
+from repro.core.records import RecordBatch, make_batch, PAYLOAD_WIDTH  # noqa: F401
+from repro.core.cdc import ChangeLog, SourceDatabase  # noqa: F401
+from repro.core.message_queue import MessageQueue, Topic, TopicConfig  # noqa: F401
+from repro.core.listener import ChangeTracker, Listener  # noqa: F401
+from repro.core.cache import InMemoryTable, lookup_ref  # noqa: F401
+from repro.core.buffer import OperationalMessageBuffer  # noqa: F401
+from repro.core.transformer import (  # noqa: F401
+    DataTransformer,
+    transform_kernel,
+    FACT_COLUMNS,
+)
+from repro.core.loader import StarSchemaWarehouse  # noqa: F401
+from repro.core.pipeline import DODETLPipeline, StreamProcessorWorker  # noqa: F401
+from repro.core.baseline import BaselineStreamProcessor  # noqa: F401
+from repro.core.partitioning import (  # noqa: F401
+    PartitionAssignment,
+    hash_key,
+    partition_of,
+    split_by_partition,
+)

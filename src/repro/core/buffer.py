@@ -1,0 +1,70 @@
+"""Operational Message Buffer (paper §3.1.2 / §3.2, 'unsynchronized
+consistency').
+
+Operational records whose master data has not yet arrived are buffered with
+their transaction time. At each new operational batch the Data Transformer
+retries exactly the buffered records whose ``txn_time`` is older than the
+In-memory cache watermark ('only reprocesses buffer messages with
+transaction dates older than the latest transaction date from the In-memory
+cache, which avoids reprocessing operational messages that still have no
+master data').
+
+The buffer state lives in the coordinator's replicated store (the paper used
+Zookeeper) so any worker can resume reprocessing after a failure — see
+``runtime.coordinator``.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+from repro.core.records import RecordBatch
+
+
+class OperationalMessageBuffer:
+    def __init__(self, capacity: int):
+        self.capacity = capacity
+        self._batch: RecordBatch = RecordBatch.empty()
+        self.dropped = 0
+        self.total_buffered = 0
+        self.total_retried = 0
+
+    def __len__(self) -> int:
+        return len(self._batch)
+
+    def push(self, late: RecordBatch) -> None:
+        if not len(late):
+            return
+        self.total_buffered += len(late)
+        merged = RecordBatch.concat([self._batch, late])
+        if len(merged) > self.capacity:
+            # drop oldest beyond capacity (recorded; tests assert zero drops
+            # under the paper's workloads)
+            self.dropped += len(merged) - self.capacity
+            merged = merged.take(np.arange(len(merged) - self.capacity,
+                                           len(merged)))
+        self._batch = merged
+
+    def pop_ready(self, watermark: int) -> RecordBatch:
+        """Remove and return records eligible for retry (txn_time <=
+        watermark)."""
+        if not len(self._batch):
+            return RecordBatch.empty()
+        ready_mask = self._batch.txn_time <= watermark
+        ready = self._batch.filter(ready_mask)
+        self._batch = self._batch.filter(~ready_mask)
+        self.total_retried += len(ready)
+        return ready
+
+    # ---------------------------------------------------------- durability
+    def export_state(self) -> dict:
+        return {"batch": self._batch.as_dict(), "dropped": self.dropped}
+
+    @staticmethod
+    def restore(state: dict, capacity: int) -> "OperationalMessageBuffer":
+        buf = OperationalMessageBuffer(capacity)
+        buf._batch = RecordBatch(**{k: np.asarray(v)
+                                    for k, v in state["batch"].items()})
+        buf.dropped = state.get("dropped", 0)
+        return buf

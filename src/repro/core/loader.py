@@ -1,0 +1,51 @@
+"""Target Database Updater (paper §3.1.2): partition-parallel load of
+transformed facts into the star-schema warehouse.
+
+``StarSchemaWarehouse`` holds one fact table (OEE fact grains) plus the
+equipment dimension; loads are per-partition appends (each partition
+'executes its query statements independently'). ``query_oee`` is the OLAP
+read path used by tests/examples to validate end-to-end correctness.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.transformer import FACT_COLUMNS
+
+
+class StarSchemaWarehouse:
+    def __init__(self):
+        self._parts: Dict[int, List[np.ndarray]] = {}
+        self.rows_loaded = 0
+        self.load_calls = 0
+
+    def load(self, partition: int, facts: np.ndarray) -> None:
+        if len(facts) == 0:
+            return
+        self._parts.setdefault(partition, []).append(np.asarray(facts))
+        self.rows_loaded += len(facts)
+        self.load_calls += 1
+
+    def fact_table(self) -> np.ndarray:
+        chunks = [c for parts in self._parts.values() for c in parts]
+        if not chunks:
+            return np.zeros((0, len(FACT_COLUMNS)), np.float32)
+        return np.concatenate(chunks)
+
+    def query_oee(self, equipment_id: Optional[int] = None) -> Dict[str, float]:
+        """OLAP aggregate: mean KPI per (optionally one) equipment unit."""
+        t = self.fact_table()
+        if equipment_id is not None:
+            t = t[t[:, 0].astype(np.int64) == equipment_id]
+        if len(t) == 0:
+            return {k: float("nan") for k in
+                    ("availability", "performance", "quality", "oee", "rows")}
+        return {
+            "availability": float(t[:, 3].mean()),
+            "performance": float(t[:, 4].mean()),
+            "quality": float(t[:, 5].mean()),
+            "oee": float(t[:, 6].mean()),
+            "rows": float(len(t)),
+        }

@@ -1,0 +1,157 @@
+"""Partitioned publish/subscribe message queue (paper §3.1.1).
+
+Kafka-shaped semantics, array-backed:
+  * one topic per source table,
+  * per-partition ordered logs with offsets,
+  * consumer groups with committed offsets (restart = resume from commit),
+  * *log compaction* for master topics: ``snapshot()`` returns the latest
+    record per row key — the mechanism the In-memory Table Updater uses to
+    (re)populate caches on bootstrap, failover and elastic reassignment.
+
+On a TPU pod the broker role is played by host memory + ICI; the observable
+contract (ordering per partition, at-least-once delivery, compaction) is
+preserved so higher stages are transport-agnostic (paper §3.3:
+technology-independence).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.partitioning import partition_of
+from repro.core.records import RecordBatch
+
+
+@dataclasses.dataclass
+class TopicConfig:
+    name: str
+    table_id: int
+    n_partitions: int
+    partition_by: str            # "row_key" (master) | "business_key" (operational)
+    compacted: bool = False      # master topics keep a latest-per-key view
+
+
+class Partition:
+    def __init__(self):
+        self.batches: List[RecordBatch] = []
+        self.length = 0
+
+    def append(self, batch: RecordBatch):
+        if len(batch):
+            self.batches.append(batch)
+            self.length += len(batch)
+
+    def read(self, offset: int, max_records: Optional[int] = None
+             ) -> RecordBatch:
+        if offset >= self.length:
+            return RecordBatch.empty()
+        out, seen = [], 0
+        budget = (self.length - offset if max_records is None else max_records)
+        for b in self.batches:
+            if seen + len(b) <= offset:
+                seen += len(b)
+                continue
+            lo = max(0, offset - seen)
+            take = b.take(np.arange(lo, len(b)))
+            seen += len(b)
+            out.append(take)
+            if sum(len(o) for o in out) >= budget:
+                break
+        batch = RecordBatch.concat(out)
+        if len(batch) > budget:
+            batch = batch.take(np.arange(budget))
+        return batch
+
+
+class Topic:
+    def __init__(self, cfg: TopicConfig):
+        self.cfg = cfg
+        self.partitions = [Partition() for _ in range(cfg.n_partitions)]
+        # compaction index: row_key -> (txn_time, payload, business_key)
+        self._compact: Dict[int, Tuple[int, np.ndarray, int]] = {}
+
+    def publish(self, batch: RecordBatch) -> None:
+        if not len(batch):
+            return
+        keys = (batch.row_key if self.cfg.partition_by == "row_key"
+                else batch.business_key)
+        parts = partition_of(keys, self.cfg.n_partitions)
+        for p in range(self.cfg.n_partitions):
+            idx = np.nonzero(parts == p)[0]
+            if len(idx):
+                self.partitions[p].append(batch.take(idx))
+        if self.cfg.compacted:
+            for i in range(len(batch)):
+                rk = int(batch.row_key[i])
+                t = int(batch.txn_time[i])
+                prev = self._compact.get(rk)
+                if prev is None or t >= prev[0]:
+                    self._compact[rk] = (t, batch.payload[i],
+                                         int(batch.business_key[i]))
+
+    def snapshot(self, business_keys: Optional[set] = None
+                 ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Compacted latest-per-row-key view, optionally filtered by the
+        business keys assigned to the requesting worker (paper: the cache
+        'only saves data related to the business keys assigned to its
+        corresponding Stream Processor node'). Returns (row_keys, payloads,
+        txn_times)."""
+        assert self.cfg.compacted, "snapshot() requires a compacted topic"
+        items = [(rk, v) for rk, v in self._compact.items()
+                 if business_keys is None or v[2] in business_keys]
+        if not items:
+            from repro.core.records import PAYLOAD_WIDTH
+            return (np.zeros(0, np.int64),
+                    np.zeros((0, PAYLOAD_WIDTH), np.float32),
+                    np.zeros(0, np.int64))
+        rks = np.array([rk for rk, _ in items], np.int64)
+        pls = np.stack([v[1] for _, v in items])
+        tts = np.array([v[0] for _, v in items], np.int64)
+        return rks, pls, tts
+
+    def high_watermark(self, partition: int) -> int:
+        return self.partitions[partition].length
+
+
+class MessageQueue:
+    """Broker: topics + consumer-group offsets (restartable consumption)."""
+
+    def __init__(self):
+        self.topics: Dict[str, Topic] = {}
+        self.offsets: Dict[Tuple[str, str, int], int] = {}  # (group, topic, part)
+
+    def create_topic(self, cfg: TopicConfig) -> Topic:
+        self.topics[cfg.name] = Topic(cfg)
+        return self.topics[cfg.name]
+
+    def publish(self, topic: str, batch: RecordBatch) -> None:
+        self.topics[topic].publish(batch)
+
+    def consume(self, group: str, topic: str, partition: int,
+                max_records: Optional[int] = None) -> RecordBatch:
+        key = (group, topic, partition)
+        off = self.offsets.get(key, 0)
+        batch = self.topics[topic].partitions[partition].read(off, max_records)
+        return batch
+
+    def commit(self, group: str, topic: str, partition: int, n: int) -> None:
+        key = (group, topic, partition)
+        self.offsets[key] = self.offsets.get(key, 0) + n
+
+    def lag(self, group: str, topic: str, partition: int) -> int:
+        key = (group, topic, partition)
+        return (self.topics[topic].high_watermark(partition)
+                - self.offsets.get(key, 0))
+
+    def committed(self, group: str, topic: str, partition: int) -> int:
+        return self.offsets.get((group, topic, partition), 0)
+
+    def restore_offsets(self, state: Dict) -> None:
+        self.offsets.update({tuple(k.split("|")): v for k, v in state.items()}
+                            if isinstance(next(iter(state), None), str)
+                            else state)
+
+    def export_offsets(self) -> Dict:
+        return dict(self.offsets)

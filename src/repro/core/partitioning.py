@@ -1,0 +1,67 @@
+"""Key partitioning (paper §3.1.1): master topics partition by *row key*
+(so the latest-per-key compaction reconstructs a table snapshot);
+operational topics partition by *business key* (the Stream Processor's
+parallelism unit — each partition's lifecycle stays on one worker / one
+data shard).
+
+The same helper drives the MoE expert dispatch (a token is a message, the
+router's expert choice is its business key): ``assign_positions`` in
+``repro.models.moe`` is the capacity-bounded variant of this assignment.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+_MIX = np.uint64(0x9E3779B97F4A7C15)
+
+
+def hash_key(keys: np.ndarray) -> np.ndarray:
+    """Deterministic 64-bit mix (splitmix64 finalizer-style)."""
+    x = keys.astype(np.uint64) * _MIX
+    x ^= x >> np.uint64(31)
+    x *= np.uint64(0xBF58476D1CE4E5B9)
+    x ^= x >> np.uint64(29)
+    return x
+
+
+def partition_of(keys: np.ndarray, n_partitions: int) -> np.ndarray:
+    return (hash_key(keys) % np.uint64(n_partitions)).astype(np.int32)
+
+
+def split_by_partition(keys: np.ndarray, n_partitions: int
+                       ) -> List[np.ndarray]:
+    part = partition_of(keys, n_partitions)
+    return [np.nonzero(part == p)[0] for p in range(n_partitions)]
+
+
+class PartitionAssignment:
+    """business-key partitions -> worker assignment with rebalancing
+    (paper §3.2: on failure/scale events the coordinator reassigns and the
+    cache-reset trigger fires for workers whose key set changed)."""
+
+    def __init__(self, n_partitions: int, workers: Sequence[str]):
+        self.n_partitions = n_partitions
+        self.assignment: Dict[int, str] = {}
+        self.rebalance(list(workers))
+
+    def rebalance(self, workers: List[str]) -> Dict[str, List[int]]:
+        """Round-robin reassign. Returns {worker: changed_partitions} so the
+        pipeline can fire In-memory cache reset triggers."""
+        if not workers:
+            raise ValueError("no workers alive")
+        old = dict(self.assignment)
+        for p in range(self.n_partitions):
+            self.assignment[p] = workers[p % len(workers)]
+        changed: Dict[str, List[int]] = {w: [] for w in workers}
+        for p, w in self.assignment.items():
+            if old.get(p) != w:
+                changed.setdefault(w, []).append(p)
+        return changed
+
+    def partitions_of(self, worker: str) -> List[int]:
+        return sorted(p for p, w in self.assignment.items() if w == worker)
+
+    def worker_of(self, partition: int) -> str:
+        return self.assignment[partition]

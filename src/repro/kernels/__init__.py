@@ -1,0 +1,3 @@
+"""Pallas TPU kernels for the perf-critical compute layers. Each package
+holds <name>.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper picking
+pallas-on-TPU / interpret-on-CPU) and ref.py (pure-jnp oracle)."""

@@ -1,0 +1,20 @@
+"""Jitted public wrapper: picks the Pallas kernel (TPU) or interpret mode
+(CPU validation), with the jnp oracle available as a fallback.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def mha(q, k, v, *, causal=True, scale=None, block_q=128, block_kv=128):
+    """[B, Hq, S, D] x [B, Hkv, S, D] -> [B, Hq, S, D]."""
+    on_tpu = jax.default_backend() == "tpu"
+    return flash_attention(q, k, v, causal=causal, scale=scale,
+                           block_q=block_q, block_kv=block_kv,
+                           interpret=not on_tpu)
+
+
+__all__ = ["mha", "flash_attention", "attention_ref"]

@@ -1,0 +1,110 @@
+"""Chunked gated-linear-recurrence kernel (TPU Pallas).
+
+One kernel serves RWKV6 (per-channel decay, lag-1 state read + bonus u) and
+Mamba2/SSD (scalar-per-head decay broadcast over dk, inclusive state read).
+
+Grid: (batch*heads, n_chunks); the chunk dimension is ``arbitrary`` so the
+running state S [dk, dv] persists in f32 VMEM scratch across chunks. Per
+chunk everything is VMEM-resident: q/k/v/log_w blocks [C, d*], the masked
+decay-ratio tensor [C, C] per dk lane is formed lane-blocked to bound VMEM.
+
+This is the on-demand stream processor of the model plane: O(T) processing
+of an unbounded token stream with a constant-size in-memory state — the
+same shape as the paper's ETL pipeline (stream + small cache), which is why
+the two share a roofline story.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _gla_kernel(q_ref, k_ref, v_ref, lw_ref, u_ref, o_ref, s_ref, *,
+                chunk: int, inclusive: bool, use_u: bool):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    q = q_ref[0].astype(jnp.float32)          # [C, dk]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)          # [C, dv]
+    lw = lw_ref[0].astype(jnp.float32)        # [C, dk]
+    S = s_ref[...]                            # [dk, dv] f32
+
+    L = jnp.cumsum(lw, axis=0)
+    Lq = L if inclusive else L - lw
+    lag = 0 if inclusive else 1
+    t = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    i = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    pair_mask = t >= (i + lag)
+
+    # inter-chunk: (q . exp(Lq)) @ S
+    inter = jax.lax.dot_general(q * jnp.exp(Lq), S, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    # intra-chunk: A[t,i] = sum_d q_td k_id exp(Lq_t,d - L_i,d), masked
+    diff = Lq[:, None, :] - L[None, :, :]                 # [C, C, dk]
+    diff = jnp.where(pair_mask[:, :, None], diff, NEG_INF)
+    A = jnp.sum(q[:, None, :] * k[None, :, :] * jnp.exp(diff), axis=-1)
+    intra = jax.lax.dot_general(A, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+    out = inter + intra
+    if use_u:
+        u = u_ref[0].astype(jnp.float32)                  # [1, dk] -> [dk]
+        dot = jnp.sum(q * u * k, axis=-1)                 # [C]
+        out = out + dot[:, None] * v
+
+    # state update: S <- exp(L_C) * S + sum_i k_i exp(L_C - L_i) v_i
+    Ltot = L[-1:, :]                                      # [1, dk]
+    k_dec = k * jnp.exp(Ltot - L)
+    s_ref[...] = jnp.exp(Ltot[0])[:, None] * S + jax.lax.dot_general(
+        k_dec, v, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("inclusive", "chunk", "interpret"))
+def gla_chunk_kernel(q: jax.Array, k: jax.Array, v: jax.Array,
+                     log_w: jax.Array, u: jax.Array | None = None, *,
+                     inclusive: bool = False, chunk: int = 64,
+                     interpret: bool = True) -> jax.Array:
+    """q,k,log_w: [BH, S, dk]; v: [BH, S, dv]; u: [BH, dk] or None.
+    Returns out [BH, S, dv] (batch*heads flattened by the ops wrapper)."""
+    bh, s, dk = q.shape
+    dv = v.shape[-1]
+    assert s % chunk == 0
+    n = s // chunk
+    use_u = u is not None
+    if u is None:
+        u = jnp.zeros((bh, dk), q.dtype)
+
+    kernel = functools.partial(_gla_kernel, chunk=chunk,
+                               inclusive=inclusive, use_u=use_u)
+    return pl.pallas_call(
+        kernel,
+        grid=(bh, n),
+        in_specs=[
+            pl.BlockSpec((1, chunk, dk), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, dv), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, chunk, dk), lambda bi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, dk), lambda bi, ci: (bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, dv), lambda bi, ci: (bi, ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dv), v.dtype),
+        scratch_shapes=[pltpu.VMEM((dk, dv), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(q, k, v, log_w, u)

@@ -1,0 +1,25 @@
+"""Public wrapper: [B, S, H, d] layout in/out, flattening (B, H) for the
+kernel grid; interpret mode off TPU.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.gla_chunk.gla_chunk import gla_chunk_kernel
+
+
+def gla(q, k, v, log_w, u=None, *, inclusive=False, chunk=64):
+    """q,k,log_w: [B, S, H, dk]; v: [B, S, H, dv]; u: [H, dk] or None."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(b * h, s, -1)
+    uf = None if u is None else jnp.tile(u, (b, 1))
+    on_tpu = jax.default_backend() == "tpu"
+    out = gla_chunk_kernel(fold(q), fold(k), fold(v), fold(log_w), uf,
+                           inclusive=inclusive, chunk=chunk,
+                           interpret=not on_tpu)
+    return out.reshape(b, h, s, dv).transpose(0, 2, 1, 3)
+
+
+__all__ = ["gla", "gla_chunk_kernel"]

@@ -1,0 +1,26 @@
+"""Oracle: the chunked-form reference lives in repro.models.gla (validated
+against a step-by-step recurrence in tests); this re-exports it in the
+kernel's [BH, S, d] layout with a per-row bonus vector (u=0 == no bonus).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gla import gla_chunk as _gla_chunk_bshd
+
+
+def gla_ref(q, k, v, log_w, u=None, *, inclusive=False, chunk=64):
+    """q,k,log_w: [BH, S, dk]; v: [BH, S, dv]; u: [BH, dk] or None."""
+    bh, s, dk = q.shape
+    if u is None:
+        u = jnp.zeros((bh, dk), q.dtype)   # zero bonus == no bonus
+
+    def one(qr, kr, vr, lwr, ur):
+        out, _ = _gla_chunk_bshd(
+            qr[None, :, None, :], kr[None, :, None, :], vr[None, :, None, :],
+            lwr[None, :, None, :], u=ur[None], inclusive=inclusive,
+            chunk=chunk, ratio_dtype=jnp.float32)
+        return out[0, :, 0]
+
+    return jax.vmap(one)(q, k, v, log_w, u)

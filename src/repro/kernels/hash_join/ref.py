@@ -1,0 +1,14 @@
+"""Oracle: the pure-jnp probe in repro.core.cache (identical contract, with
+int64 txn downcast to i32 for the kernel comparison)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.cache import lookup_ref
+
+
+def hash_join_ref(query_keys, keys_tbl, vals_tbl, txn_tbl):
+    vals, found, txn = lookup_ref(query_keys.astype(jnp.int32),
+                                  keys_tbl.astype(jnp.int32),
+                                  vals_tbl, txn_tbl.astype(jnp.int32))
+    return vals, found, txn.astype(jnp.int32)

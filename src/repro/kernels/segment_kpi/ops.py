@@ -1,0 +1,25 @@
+"""Public wrapper: pads to the block size, sums the per-block rollups."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.segment_kpi.segment_kpi import segment_kpi_kernel
+
+
+def segment_kpi(prod, eq_rows, q_rows, *, n_units: int = 32,
+                block: int = 256):
+    n = prod.shape[0]
+    pad = (-n) % block
+    if pad:
+        padrow = jnp.full((pad, 8), -1.0, jnp.float32)
+        prod = jnp.concatenate([prod, padrow])
+        eq_rows = jnp.concatenate([eq_rows, padrow])
+        q_rows = jnp.concatenate([q_rows, padrow])
+    on_tpu = jax.default_backend() == "tpu"
+    facts, agg = segment_kpi_kernel(prod, eq_rows, q_rows, n_units=n_units,
+                                    block=block, interpret=not on_tpu)
+    return facts[:n], agg.sum(axis=0)
+
+
+__all__ = ["segment_kpi", "segment_kpi_kernel"]

@@ -1,0 +1,38 @@
+"""Oracle: per-record KPI math identical to repro.core.transformer plus the
+per-unit rollup in plain jnp (segment_sum)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-6
+
+
+def segment_kpi_ref(prod, eq_rows, q_rows, *, n_units: int = 32):
+    t_start, t_end = prod[:, 3], prod[:, 4]
+    qty = prod[:, 5]
+    e_start, e_end = eq_rows[:, 3], eq_rows[:, 4]
+    status, max_speed, planned = eq_rows[:, 5], eq_rows[:, 6], eq_rows[:, 7]
+    defects, scrap = q_rows[:, 4], q_rows[:, 6]
+
+    overlap = jnp.maximum(jnp.minimum(t_end, e_end) -
+                          jnp.maximum(t_start, e_start), 0.0)
+    duration = jnp.maximum(t_end - t_start, EPS)
+    seg_on = jnp.where(status > 0.5, overlap, 0.0)
+    seg_off = duration - seg_on
+    availability = jnp.clip(seg_on / jnp.maximum(planned, EPS), 0.0, 1.0)
+    performance = jnp.clip(qty / jnp.maximum(max_speed * duration, EPS),
+                           0.0, 1.0)
+    good = jnp.maximum(qty - defects - scrap, 0.0)
+    quality = jnp.clip(good / jnp.maximum(qty, EPS), 0.0, 1.0)
+    oee = availability * performance * quality
+    valid = (eq_rows[:, 1] >= 0) & (q_rows[:, 1] >= 0)
+    facts = jnp.stack([prod[:, 1], t_start, t_end, availability,
+                       performance, quality, oee, seg_on, seg_off,
+                       valid.astype(jnp.float32)], axis=-1)
+    kpis = jnp.stack([availability, performance, quality, oee,
+                      jnp.ones_like(oee)], axis=-1)
+    kpis = jnp.where(valid[:, None], kpis, 0.0)
+    agg = jax.ops.segment_sum(kpis, prod[:, 1].astype(jnp.int32),
+                              num_segments=n_units)
+    return facts, agg

@@ -1,0 +1,95 @@
+"""Fact-grain splitting + OEE KPI kernel (TPU Pallas) — the Data
+Transformer's numeric core (paper Fig. 3 + §4 KPIs), fused:
+
+  per record: interval intersection (production window x equipment status),
+  availability / performance / quality / OEE, fact packing — then a
+  per-equipment segmented reduction (sum of KPIs + counts) via one-hot
+  matmul, so the OLAP rollup leaves the kernel already aggregated.
+
+Grid: (record_blocks,) parallel; the per-unit accumulator is a second
+output reduced across blocks by the caller (associative sum).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-6
+N_FACT = 10
+
+
+def _kpi_kernel(prod_ref, eq_ref, q_ref, facts_ref, agg_ref, *,
+                n_units: int, block: int):
+    prod = prod_ref[...]                                  # [B, 8]
+    eq = eq_ref[...]                                      # [B, 8] joined rows
+    qrow = q_ref[...]                                     # [B, 8]
+
+    t_start, t_end = prod[:, 3], prod[:, 4]
+    qty, speed = prod[:, 5], prod[:, 6]
+    e_start, e_end = eq[:, 3], eq[:, 4]
+    status, max_speed, planned = eq[:, 5], eq[:, 6], eq[:, 7]
+    defects, scrap = qrow[:, 4], qrow[:, 6]
+
+    inter_lo = jnp.maximum(t_start, e_start)
+    inter_hi = jnp.minimum(t_end, e_end)
+    overlap = jnp.maximum(inter_hi - inter_lo, 0.0)
+    duration = jnp.maximum(t_end - t_start, EPS)
+    seg_on = jnp.where(status > 0.5, overlap, 0.0)
+    seg_off = duration - seg_on
+
+    availability = jnp.clip(seg_on / jnp.maximum(planned, EPS), 0.0, 1.0)
+    performance = jnp.clip(qty / jnp.maximum(max_speed * duration, EPS),
+                           0.0, 1.0)
+    good = jnp.maximum(qty - defects - scrap, 0.0)
+    quality = jnp.clip(good / jnp.maximum(qty, EPS), 0.0, 1.0)
+    oee = availability * performance * quality
+
+    valid = (eq[:, 1] >= 0) & (qrow[:, 1] >= 0)
+    facts = jnp.stack([prod[:, 1], t_start, t_end, availability,
+                       performance, quality, oee, seg_on, seg_off,
+                       valid.astype(jnp.float32)], axis=-1)
+    facts_ref[...] = facts
+
+    # segmented rollup: one-hot(equipment) @ [kpis, 1] on the MXU
+    unit = prod[:, 1].astype(jnp.int32)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (block, n_units), 1)
+    onehot = ((iota == unit[:, None]) & valid[:, None]).astype(jnp.float32)
+    kpis = jnp.stack([availability, performance, quality, oee,
+                      jnp.ones_like(oee)], axis=-1)      # [B, 5]
+    agg_ref[0] = jax.lax.dot_general(
+        onehot, kpis, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)              # [n_units, 5]
+
+
+@functools.partial(jax.jit, static_argnames=("n_units", "block", "interpret"))
+def segment_kpi_kernel(prod: jax.Array, eq_rows: jax.Array,
+                       q_rows: jax.Array, *, n_units: int = 32,
+                       block: int = 256, interpret: bool = True):
+    """prod/eq_rows/q_rows: [N, 8] f32 (production payloads + joined master
+    rows; a row with col1 < 0 marks a join miss). Returns (facts [N, 10],
+    agg [blocks, n_units, 5]) — caller sums agg over blocks."""
+    n = prod.shape[0]
+    assert n % block == 0
+    nb = n // block
+    kernel = functools.partial(_kpi_kernel, n_units=n_units, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block, 8), lambda i: (i, 0)),
+            pl.BlockSpec((block, 8), lambda i: (i, 0)),
+            pl.BlockSpec((block, 8), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block, N_FACT), lambda i: (i, 0)),
+            pl.BlockSpec((1, n_units, 5), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, N_FACT), jnp.float32),
+            jax.ShapeDtypeStruct((nb, n_units, 5), jnp.float32),
+        ],
+        interpret=interpret,
+    )(prod, eq_rows, q_rows)

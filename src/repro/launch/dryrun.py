@@ -1,0 +1,305 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell against the production mesh and extract memory/cost/collective
+analysis. MUST be run as its own process (the two lines above must execute
+before jax initializes devices):
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch internlm2-1.8b \
+        --shape train_4k [--multi-pod] [--out experiments/dryrun]
+
+Exit code 0 and a JSON artifact on success; "skipped" cells (decode for
+encoder-only archs, long_500k for quadratic-attention archs) emit a JSON
+with status=skipped.
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPE_SUITES, get_config
+from repro.launch import specs as S
+from repro.launch.hlo_analysis import analyze_hlo, roofline_terms
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import Model
+from repro.models.param import tree_abstract, tree_specs
+from repro.models.sharding import ShardingCtx, default_rules
+from repro.optim import AdamWConfig, abstract_state
+from repro.train.serve_step import make_decode_step, make_prefill_step
+from repro.train.train_step import make_train_step
+
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def build_cell(arch: str, shape: str, *, multi_pod: bool,
+               overrides: Dict[str, Any] | None = None):
+    """Returns (jitted_fn, abstract_args, meta) for one dry-run cell."""
+    overrides = dict(overrides) if overrides else {}
+    fsdp = bool(overrides.pop("fsdp", False))
+    sp = bool(overrides.pop("seq_parallel", False))
+    dp_mode = overrides.pop("dp_mode", "auto")
+    second_matmul = overrides.pop("second_matmul", "row")
+    moe_group = overrides.pop("moe_group", None)
+    moe_cap = overrides.pop("moe_capacity", None)
+    cfg = get_config(arch)
+    if cfg.moe is not None and (moe_group or moe_cap):
+        cfg = dataclasses.replace(cfg, moe=dataclasses.replace(
+            cfg.moe,
+            group_size=moe_group or cfg.moe.group_size,
+            capacity_factor=moe_cap or cfg.moe.capacity_factor))
+    if cfg.param_count() > 2e10 and shape == "train_4k" \
+            and "microbatches" not in overrides:
+        # 20B+ models: halve per-microbatch activation footprint
+        overrides["microbatches"] = 16
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    suite = SHAPE_SUITES[shape]
+
+    # ---- applicability (assignment rules)
+    if suite.kind == "decode" and not cfg.supports_decode:
+        return None, None, {"status": "skipped", "reason": "no decode path"}
+    if suite.name == "long_500k" and not cfg.subquadratic:
+        return None, None, {"status": "skipped",
+                            "reason": "quadratic attention at 500k"}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model_axis = 16
+    long_ctx = suite.name == "long_500k"
+    if suite.kind == "train":
+        # Plain TP + ZeRO-1 moments + microbatching by default. GSPMD's dot
+        # partitioner turns seq-sharded residuals into per-layer FULL-WEIGHT
+        # all-gathers (measured: 3.2 TB/step on the 33B cell), so SP is a
+        # per-cell override, not the default — see EXPERIMENTS.md §Perf.
+        rules = default_rules(multi_pod, fsdp=fsdp, seq_parallel=sp,
+                              second_matmul=second_matmul)
+    else:
+        rules = default_rules(multi_pod, second_matmul=second_matmul)
+    if long_ctx:
+        # B=1 cannot shard over data; shard the KV sequence there instead
+        rules["batch"] = None
+        rules["kv_seq"] = "data"
+    elif suite.kind in ("decode", "prefill") and cfg.n_kv_heads < model_axis:
+        # kv_heads cannot absorb the model axis -> shard cache seq over it
+        # (otherwise the cache replicates model_axis-fold and decode OOMs)
+        rules["kv_seq"] = "model"
+    ctx = ShardingCtx(mesh=mesh, rules=rules)
+    model = Model(cfg)
+
+    param_specs = model.specs(rules, mesh)
+    param_sh = _named(mesh, param_specs)
+    abstract_params = model.abstract()
+
+    meta = {
+        "status": "ok", "arch": arch, "shape": shape,
+        "mesh": "pod2x16x16" if multi_pod else "16x16",
+        "n_chips": mesh.devices.size,
+        "params": model_param_count(abstract_params),
+        "active_params": cfg.active_param_count(),
+        "kind": suite.kind,
+    }
+
+    if suite.kind == "train":
+        opt_cfg = AdamWConfig()
+        batch, batch_axes = S.train_batch_specs(cfg, suite)
+        meta["tokens_per_step"] = suite.global_batch * suite.seq_len
+        if dp_mode == "manual":
+            from repro.train.manual_dp import make_manual_dp_train_step
+            jitted, opt_specs, _ = make_manual_dp_train_step(
+                model, opt_cfg, mesh, rules, batch_axes,
+                multi_pod=multi_pod)
+            opt_abs = abstract_state(abstract_params)
+            meta["dp_mode"] = "manual"
+            return jitted, (abstract_params, opt_abs, batch), meta
+        # auto (pure GSPMD): ZeRO moments + per-microbatch reduced grads
+        zero_rules = dict(rules)
+        zero_rules["embed"] = ("pod", "data") if multi_pod else "data"
+        moment_specs = model.specs(zero_rules, mesh)
+        grad_specs = moment_specs
+        opt_specs = type(abstract_state(abstract_params))(
+            step=P(), mu=moment_specs, nu=jax.tree.map(lambda x: x,
+                                                       moment_specs))
+        batch_specs = S.batch_pspecs(batch_axes, rules)
+        step_fn = make_train_step(model, opt_cfg, ctx, grad_specs=grad_specs)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(param_sh, _named(mesh, opt_specs),
+                          _named(mesh, batch_specs)),
+            out_shardings=(param_sh, _named(mesh, opt_specs), None),
+            donate_argnums=(0, 1))
+        args = (abstract_params, abstract_state(abstract_params), batch)
+        meta["dp_mode"] = "auto"
+        return jitted, args, meta
+
+    if suite.kind == "prefill":
+        batch, batch_axes = S.train_batch_specs(cfg, suite)
+        batch.pop("targets")
+        batch_axes.pop("targets")
+        batch_specs = S.batch_pspecs(batch_axes, rules)
+        cache_defs = model.cache_defs(suite.global_batch, suite.seq_len)
+        cache_specs = tree_specs(cache_defs, rules, mesh)
+        step_fn = make_prefill_step(model, ctx)
+        jitted = jax.jit(
+            step_fn,
+            in_shardings=(param_sh, _named(mesh, batch_specs)),
+            out_shardings=(None, _named(mesh, cache_specs)))
+        meta["tokens_per_step"] = suite.global_batch * suite.seq_len
+        return jitted, (abstract_params, batch), meta
+
+    # ---- decode
+    cache_defs, cache, token, index, token_axes = S.decode_inputs(model, suite)
+    cache_specs = tree_specs(cache_defs, rules, mesh)
+    token_spec = S.batch_pspecs({"t": token_axes}, rules)["t"]
+    step_fn = make_decode_step(model, ctx)
+    jitted = jax.jit(
+        step_fn,
+        in_shardings=(param_sh, _named(mesh, cache_specs),
+                      NamedSharding(mesh, token_spec),
+                      NamedSharding(mesh, P())),
+        out_shardings=(None, None, _named(mesh, cache_specs)),
+        donate_argnums=(1,))
+    meta["tokens_per_step"] = suite.global_batch
+    return jitted, (abstract_params, cache, token, index), meta
+
+
+def model_param_count(abstract_params) -> int:
+    return int(sum(x.size for x in jax.tree.leaves(abstract_params)))
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
+             skip_hlo: bool = False, tag: str = "",
+             overrides: Dict[str, Any] | None = None) -> Dict[str, Any]:
+    t0 = time.time()
+    jitted, args, meta = build_cell(arch, shape, multi_pod=multi_pod,
+                                    overrides=overrides)
+    result = dict(meta)
+    if meta["status"] == "skipped":
+        _write(out_dir, arch, shape, multi_pod, result, tag)
+        return result
+    try:
+        lowered = jitted.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        result["lower_s"] = round(t1 - t0, 2)
+        result["compile_s"] = round(t2 - t1, 2)
+
+        # ---- memory analysis (per-device)
+        try:
+            ma = compiled.memory_analysis()
+            if ma is not None:
+                result["memory"] = {
+                    k: int(getattr(ma, k)) for k in
+                    ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes")
+                    if hasattr(ma, k)}
+                live = (result["memory"].get("argument_size_in_bytes", 0)
+                        + result["memory"].get("output_size_in_bytes", 0)
+                        + result["memory"].get("temp_size_in_bytes", 0)
+                        - result["memory"].get("alias_size_in_bytes", 0))
+                result["memory"]["peak_estimate_bytes"] = int(live)
+        except Exception as e:  # pragma: no cover
+            result["memory_error"] = str(e)
+
+        # ---- raw XLA cost analysis (per-device, while bodies counted ONCE —
+        # kept for reference; the trip-count-corrected numbers below are the
+        # roofline source)
+        try:
+            ca = compiled.cost_analysis()
+            if isinstance(ca, (list, tuple)):
+                ca = ca[0]
+            result["xla_cost_raw"] = {
+                "flops_per_device": float(ca.get("flops", 0.0)),
+                "bytes_per_device": float(ca.get("bytes accessed", 0.0)),
+            }
+        except Exception as e:  # pragma: no cover
+            result["cost_error"] = str(e)
+
+        # ---- trip-count-corrected analysis of the partitioned HLO
+        hlo = compiled.as_text()
+        result["hlo_chars"] = len(hlo)
+        analysis = analyze_hlo(hlo)
+        del hlo
+        result["cost"] = {
+            "flops_per_device": analysis["flops"],
+            "bytes_per_device": analysis["bytes"],
+        }
+        result["collectives"] = analysis["collectives"]
+
+        # ---- roofline
+        n = meta["n_chips"]
+        flops_dev = analysis["flops"]
+        bytes_dev = analysis["bytes"]
+        wire = sum(c["wire_bytes"] for c in analysis["collectives"].values())
+        operand = sum(c["result_bytes"] for c in analysis["collectives"].values())
+        result["collective_wire_bytes_per_device"] = wire
+        result["collective_result_bytes_per_device"] = operand
+        result["roofline"] = roofline_terms(
+            global_flops=flops_dev * n, device_bytes=bytes_dev,
+            collective_wire_bytes=wire, n_chips=n)
+        # model flops: 6*N_active*D train, 2*N_active*D inference
+        mult = 6 if meta["kind"] == "train" else 2
+        result["model_flops"] = mult * meta["active_params"] * meta["tokens_per_step"]
+        hlo_total = flops_dev * n
+        result["model_flops_ratio"] = (result["model_flops"] / hlo_total
+                                       if hlo_total else None)
+    except Exception as e:
+        result["status"] = "error"
+        result["error"] = f"{type(e).__name__}: {e}"
+        result["traceback"] = traceback.format_exc()[-4000:]
+    result["total_s"] = round(time.time() - t0, 2)
+    _write(out_dir, arch, shape, multi_pod, result, tag)
+    return result
+
+
+def _write(out_dir, arch, shape, multi_pod, result, tag=""):
+    os.makedirs(out_dir, exist_ok=True)
+    mesh_tag = "multipod" if multi_pod else "pod"
+    safe_arch = arch.replace(".", "p").replace("/", "_")
+    suffix = f"_{tag}" if tag else ""
+    path = os.path.join(out_dir, f"{safe_arch}__{shape}__{mesh_tag}{suffix}.json")
+    with open(path, "w") as f:
+        json.dump(result, f, indent=1, default=str)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=list(SHAPE_SUITES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--skip-hlo", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg override key=value (int/float/bool)")
+    args = ap.parse_args()
+    overrides = {}
+    for ov in args.override:
+        k, v = ov.split("=", 1)
+        overrides[k] = json.loads(v)
+    res = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   out_dir=args.out, skip_hlo=args.skip_hlo, tag=args.tag,
+                   overrides=overrides or None)
+    status = res["status"]
+    brief = {k: res.get(k) for k in
+             ("status", "compile_s", "model_flops_ratio", "error")}
+    if "roofline" in res:
+        brief.update(res["roofline"])
+    if "memory" in res:
+        brief["peak_bytes_per_dev"] = res["memory"].get("peak_estimate_bytes")
+    print(json.dumps({"arch": args.arch, "shape": args.shape,
+                      "multi_pod": args.multi_pod, **brief}))
+    raise SystemExit(0 if status in ("ok", "skipped") else 1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,463 @@
+"""Post-compilation HLO analysis.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body exactly once —
+useless for scan-over-layers programs — and carries no collective
+information. This module parses the optimized (SPMD-partitioned, per-device)
+HLO text directly and builds a TPU-oriented cost model:
+
+  * call-graph multiplicities from ``backend_config known_trip_count``
+    (lax.scan lowers to whiles that carry exact trip counts),
+  * dot FLOPs = 2 * prod(result dims) * prod(contracting dims),
+  * HBM traffic counted at materialization boundaries only (dots, fusions,
+    copies, reduces, slices, collectives). Fusion operand traffic is
+    *slice-aware*: an operand that the fused computation consumes only
+    through (dynamic-)slices contributes the slice bytes, not the full
+    buffer — critical for scan-stacked layer parameters,
+  * collective wire bytes per kind with ring-algorithm multipliers.
+
+All numbers are per-device (the SPMD module is the per-device program).
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict, deque
+from typing import Dict, List, Optional, Tuple
+
+# TPU v5e hardware model (per chip)
+PEAK_FLOPS_BF16 = 197e12          # FLOP/s
+HBM_BW = 819e9                    # B/s
+ICI_BW = 50e9                     # B/s per link (conservative single-link)
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "c128": 16,
+    "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3b11fnuz": 1,
+    "s4": 0.5, "u4": 0.5,
+}
+
+COLLECTIVE_KINDS = ("all-reduce", "all-gather", "reduce-scatter",
+                    "all-to-all", "collective-permute", "ragged-all-to-all")
+
+_SHAPE_RE = re.compile(r"([a-z]\w*?)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
+_OPND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_BRACE_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_SLICE_OPS = {"dynamic-slice", "slice"}
+_TRAFFIC_OPS = {
+    "dot", "convolution", "fusion", "copy", "reduce", "reduce-window",
+    "dynamic-slice", "dynamic-update-slice", "gather", "scatter",
+    "concatenate", "pad", "sort", "select-and-scatter", "fft",
+    "triangular-solve", "cholesky", "rng", "rng-bit-generator", "transpose",
+}
+
+
+def _first_shape(text: str) -> Tuple[Optional[str], Optional[List[int]]]:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None, None
+    dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+    return m.group(1), dims
+
+
+def _shape_bytes(dt: Optional[str], dims: Optional[List[int]]) -> float:
+    if dt is None:
+        return 0.0
+    n = float(math.prod(dims)) if dims else 1.0
+    return n * _DTYPE_BYTES.get(dt, 0)
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _BRACE_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+def _wire_multiplier(kind: str, n: int) -> float:
+    """Per-device ring wire bytes as a multiple of the RESULT size."""
+    if n <= 1:
+        return 0.0
+    if kind == "all-reduce":
+        return 2.0 * (n - 1) / n
+    if kind == "all-gather":
+        return (n - 1) / n          # result is the gathered buffer
+    if kind == "reduce-scatter":
+        return float(n - 1)         # result is the local shard
+    if kind in ("all-to-all", "ragged-all-to-all"):
+        return (n - 1) / n
+    if kind == "collective-permute":
+        return 1.0
+    return 1.0
+
+
+class _Computation:
+    __slots__ = ("name", "flops", "collectives", "calls", "fusion_callees",
+                 "param_order", "param_bytes", "param_slice_bytes",
+                 "param_full", "traffic", "alias_map")
+
+    def __init__(self, name: str):
+        self.name = name
+        self.flops = 0.0
+        self.collectives: List[Tuple[str, float, int]] = []
+        self.calls: List[Tuple[str, float]] = []
+        self.fusion_callees: List[str] = []
+        self.param_order: List[str] = []           # parameter(i) names, by i
+        self.param_bytes: Dict[str, float] = {}
+        self.param_slice_bytes: Dict[str, float] = defaultdict(float)
+        self.param_full: Dict[str, bool] = {}
+        self.alias_map: Dict[str, str] = {}        # view name -> param name
+        # traffic records: (op, result_bytes, [(operand, bytes)]) OR
+        # ("fusion:<callee>", result_bytes, [(operand, bytes)])
+        self.traffic: List[Tuple[str, float, List[Tuple[str, float]]]] = []
+
+
+def _op_kind(rhs: str) -> str:
+    i = 0
+    if rhs.startswith("("):
+        depth = 0
+        for j, c in enumerate(rhs):
+            if c == "(":
+                depth += 1
+            elif c == ")":
+                depth -= 1
+                if depth == 0:
+                    i = j + 1
+                    break
+    else:
+        sp = rhs.find(" ")
+        i = sp + 1 if sp != -1 else 0
+    rest = rhs[i:].lstrip()
+    m = re.match(r"([\w\-]+)\(", rest)
+    return m.group(1) if m else ""
+
+
+def parse_hlo(text: str) -> Dict[str, _Computation]:
+    comps: Dict[str, _Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[_Computation] = None
+    symbols: Dict[str, float] = {}
+
+    for raw in text.splitlines():
+        stripped = raw.strip()
+        if not stripped:
+            continue
+        if stripped.endswith("{") and " -> " in stripped and " = " not in \
+                stripped.split(" -> ")[0]:
+            mc = _COMP_RE.match(stripped)
+            if mc:
+                cur = _Computation(mc.group(1))
+                comps[cur.name] = cur
+                if stripped.startswith("ENTRY"):
+                    entry = cur.name
+                symbols = {}
+                continue
+        if cur is None:
+            continue
+        md = _DEF_RE.match(stripped)
+        if not md:
+            continue
+        name, rhs = md.group(1), md.group(2)
+        dt, dims = _first_shape(rhs)
+        rbytes = _shape_bytes(dt, dims)
+        symbols[name] = rbytes
+        op = _op_kind(rhs)
+
+        # operand names (inside the first paren group)
+        opnds: List[str] = []
+        paren = rhs.find("(")
+        if paren != -1:
+            opnds = _OPND_RE.findall(rhs[paren + 1:].split(")")[0])
+
+        # ---- parameters (for slice-aware fusion operand traffic)
+        if op == "parameter":
+            cur.param_order.append(name)
+            cur.param_bytes[name] = rbytes
+            cur.param_full[name] = False
+        else:
+            for oi, o in enumerate(opnds):
+                root = cur.alias_map.get(o, o)
+                if root in cur.param_bytes:
+                    if op in _SLICE_OPS:
+                        cur.param_slice_bytes[root] += rbytes
+                    elif op == "dynamic-update-slice" and oi == 0:
+                        # in-place window write: charge the update size
+                        upd = symbols.get(opnds[1], 0.0) if len(opnds) > 1                             else 0.0
+                        cur.param_slice_bytes[root] += 2.0 * upd
+                        cur.alias_map[name] = root
+                    elif op in ("get-tuple-element", "bitcast", "reshape",
+                                "transpose", "copy"):
+                        # aliasing / relayout view: track back to the param
+                        cur.alias_map[name] = root
+                    else:
+                        cur.param_full[root] = True
+
+        # ---- call edges
+        if op == "while":
+            trips = 1.0
+            mt = _TRIP_RE.search(rhs)
+            if mt:
+                trips = float(mt.group(1))
+            mb = re.search(r"body=%([\w.\-]+)", rhs)
+            mcnd = re.search(r"condition=%([\w.\-]+)", rhs)
+            if mb:
+                cur.calls.append((mb.group(1), trips))
+            if mcnd:
+                cur.calls.append((mcnd.group(1), trips + 1))
+        elif op == "fusion":
+            mfc = re.search(r"calls=%([\w.\-]+)", rhs)
+            if mfc:
+                cur.calls.append((mfc.group(1), 1.0))
+                cur.fusion_callees.append(mfc.group(1))
+                cur.traffic.append((f"fusion:{mfc.group(1)}", rbytes,
+                                    [(o, symbols.get(o, 0.0)) for o in opnds]))
+        elif op == "call":
+            mtc = re.search(r"to_apply=%([\w.\-]+)", rhs)
+            if mtc:
+                cur.calls.append((mtc.group(1), 1.0))
+        elif op == "conditional":
+            for mb2 in re.finditer(
+                    r"(?:branch_computations=\{([^}]*)\}|"
+                    r"true_computation=%([\w.\-]+)|"
+                    r"false_computation=%([\w.\-]+))", rhs):
+                if mb2.group(1):
+                    for nm in _OPND_RE.findall(mb2.group(1)):
+                        cur.calls.append((nm, 1.0))
+                else:
+                    cur.calls.append((mb2.group(2) or mb2.group(3), 1.0))
+        elif "to_apply=" in rhs:
+            mta = re.search(r"to_apply=%([\w.\-]+)", rhs)
+            if mta:
+                cur.calls.append((mta.group(1), 1.0))
+                cur.fusion_callees.append(mta.group(1))  # scalar applier
+
+        # ---- dot flops
+        if op == "dot":
+            contract = 1.0
+            mctr = _CONTRACT_RE.search(rhs)
+            if mctr and opnds:
+                # need lhs operand dims: re-find its shape record
+                pass
+            cur.traffic.append(("dot", rbytes,
+                                [(o, symbols.get(o, 0.0)) for o in opnds]))
+
+        # ---- collectives (count at -start; skip -done)
+        base = op[:-6] if op.endswith("-start") else op
+        if base in COLLECTIVE_KINDS and not op.endswith("-done"):
+            if op.endswith("-start"):
+                result_type = rhs.split(op + "(")[0]
+                sizes = [_shape_bytes(d2, [int(x) for x in s2.split(",")]
+                                      if s2 else [])
+                         for d2, s2 in _SHAPE_RE.findall(result_type)]
+                if not sizes:
+                    cb = 0.0
+                elif base == "all-gather":
+                    cb = max(sizes)
+                elif base == "reduce-scatter":
+                    cb = min(sizes)
+                else:
+                    cb = sizes[-1]
+            else:
+                cb = rbytes
+            cur.collectives.append((base, cb, _group_size(rhs)))
+            cur.traffic.append((base, cb, []))   # HBM side of the collective
+
+        # ---- other traffic boundaries
+        if op in _TRAFFIC_OPS and op != "fusion" and op != "dot":
+            if op in _SLICE_OPS:
+                cur.traffic.append((op, 2.0 * rbytes, []))
+            elif op == "dynamic-update-slice":
+                known = [symbols[o] for o in opnds[1:] if o in symbols]
+                upd = min(known) if known else rbytes / 16.0
+                cur.traffic.append((op, 2.0 * upd, []))
+            else:
+                cur.traffic.append((op, rbytes,
+                                    [(o, symbols.get(o, 0.0)) for o in opnds]))
+
+    if entry is not None:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+# dot flops need operand shapes; easiest done in a second pass with a global
+# regex over def lines per computation. To keep one-pass parsing simple we
+# re-scan the text for dots only.
+_DOT_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%[\w.\-]+\s*=\s*([a-z]\w*)\[([\d,]*)\][^=]*?dot\("
+    r"%([\w.\-]+),\s*%([\w.\-]+)\),\s*lhs_batch_dims=\{([\d,]*)\}.*?"
+    r"lhs_contracting_dims=\{([\d,]*)\}", )
+_DOT_SIMPLE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%[\w.\-]+\s*=\s*([a-z]\w*)\[([\d,]*)\]\S*\s+dot\("
+    r"%([\w.\-]+),\s*%([\w.\-]+)\)(.*)$")
+
+
+def _dot_flops_pass(text: str, comps: Dict[str, _Computation]) -> None:
+    """Second pass: exact dot FLOPs (needs operand shapes)."""
+    cur_name: Optional[str] = None
+    symbols: Dict[str, List[int]] = {}
+    for raw in text.splitlines():
+        stripped = raw.strip()
+        if stripped.endswith("{") and " -> " in stripped and " = " not in \
+                stripped.split(" -> ")[0]:
+            mc = _COMP_RE.match(stripped)
+            if mc:
+                cur_name = mc.group(1)
+                symbols = {}
+                continue
+        md = _DEF_RE.match(stripped)
+        if not md or cur_name is None:
+            continue
+        name, rhs = md.group(1), md.group(2)
+        dt, dims = _first_shape(rhs)
+        symbols[name] = dims or []
+        if " dot(" not in rhs and not rhs.startswith("dot("):
+            continue
+        mres = _DOT_SIMPLE_RE.match(stripped)
+        if not mres:
+            continue
+        rdims = [int(x) for x in mres.group(2).split(",")] if mres.group(2) else []
+        lhs = mres.group(3)
+        tail = mres.group(5)
+        mc2 = _CONTRACT_RE.search(tail)
+        contract = 1.0
+        lhs_dims = symbols.get(lhs, [])
+        if mc2 and mc2.group(1):
+            for d in mc2.group(1).split(","):
+                di = int(d)
+                if di < len(lhs_dims):
+                    contract *= lhs_dims[di]
+        flops = 2.0 * float(math.prod(rdims) if rdims else 1) * contract
+        comp = comps.get(cur_name)
+        if comp is not None:
+            comp.flops += flops
+
+
+def _multiplicities(comps: Dict[str, _Computation]) -> Dict[str, float]:
+    entry = comps.get("__entry__")
+    incoming: Dict[str, float] = defaultdict(float)
+    if entry is None:
+        return incoming
+    edges = {n: comps[n].calls for n in comps if n != "__entry__"}
+    indeg: Dict[str, int] = defaultdict(int)
+    for n, es in edges.items():
+        for callee, _ in es:
+            if callee in comps:
+                indeg[callee] += 1
+    dq = deque([entry.name])
+    incoming[entry.name] = 1.0
+    done = set()
+    while dq:
+        n = dq.popleft()
+        if n in done:
+            continue
+        done.add(n)
+        for callee, m in edges.get(n, []):
+            if callee not in comps:
+                continue
+            incoming[callee] += incoming[n] * m
+            indeg[callee] -= 1
+            if indeg[callee] <= 0:
+                dq.append(callee)
+    return incoming
+
+
+def _param_traffic(comp: _Computation) -> List[float]:
+    """Per-parameter effective read bytes for a fusion body."""
+    out = []
+    for p in comp.param_order:
+        full = comp.param_bytes.get(p, 0.0)
+        if comp.param_full.get(p, False):
+            out.append(full)
+        else:
+            out.append(min(comp.param_slice_bytes.get(p, 0.0), full))
+    return out
+
+
+def analyze_hlo(text: str) -> Dict[str, object]:
+    comps = parse_hlo(text)
+    _dot_flops_pass(text, comps)
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {"flops": 0.0, "bytes": 0.0, "collectives": {}}
+    incoming = _multiplicities(comps)
+
+    bytes_free = set()
+    for c in comps.values():
+        bytes_free.update(c.fusion_callees)
+    grew = True
+    while grew:
+        grew = False
+        for name in list(bytes_free):
+            c = comps.get(name)
+            if c is None:
+                continue
+            for callee in c.fusion_callees:
+                if callee not in bytes_free:
+                    bytes_free.add(callee)
+                    grew = True
+
+    flops = 0.0
+    byts = 0.0
+    colls: Dict[str, Dict[str, float]] = {}
+    for name, c in comps.items():
+        if name == "__entry__":
+            continue
+        m = incoming.get(name, 0.0)
+        if m <= 0:
+            continue
+        flops += c.flops * m
+        if name not in bytes_free:
+            local = 0.0
+            for kind, rbytes, opnds in c.traffic:
+                if kind.startswith("fusion:"):
+                    body = comps.get(kind.split(":", 1)[1])
+                    if body is not None:
+                        pt = _param_traffic(body)
+                        # match operands positionally with body params
+                        ops_b = 0.0
+                        for i, (oname, obytes) in enumerate(opnds):
+                            eff = pt[i] if i < len(pt) else obytes
+                            ops_b += min(eff, obytes) if obytes else eff
+                        local += rbytes + ops_b
+                    else:
+                        local += rbytes + sum(ob for _, ob in opnds)
+                else:
+                    local += rbytes + sum(ob for _, ob in opnds)
+            byts += local * m
+        for kind, cb, n in c.collectives:
+            rec = colls.setdefault(kind, {"count": 0.0, "result_bytes": 0.0,
+                                          "wire_bytes": 0.0, "max_group": 0})
+            rec["count"] += m
+            rec["result_bytes"] += cb * m
+            rec["wire_bytes"] += cb * _wire_multiplier(kind, n) * m
+            rec["max_group"] = max(rec["max_group"], n)
+    return {"flops": flops, "bytes": byts, "collectives": colls}
+
+
+def roofline_terms(*, global_flops: float, device_bytes: float,
+                   collective_wire_bytes: float, n_chips: int
+                   ) -> Dict[str, object]:
+    """Three roofline terms in seconds per step (per-chip denominators)."""
+    t_compute = global_flops / (n_chips * PEAK_FLOPS_BF16)
+    t_memory = device_bytes / HBM_BW
+    t_collective = collective_wire_bytes / ICI_BW
+    dominant = max(
+        (("compute", t_compute), ("memory", t_memory),
+         ("collective", t_collective)), key=lambda kv: kv[1])[0]
+    return {
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_collective,
+        "dominant": dominant,
+        "bound_s": max(t_compute, t_memory, t_collective),
+    }

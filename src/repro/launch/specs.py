@@ -1,0 +1,66 @@
+"""Abstract input construction for every (architecture x shape) cell.
+
+``input_specs`` returns ShapeDtypeStruct stand-ins (weak-type-correct,
+shardable, zero allocation) for the arguments of the step function a cell
+lowers: ``train_step`` for train shapes, ``prefill_step`` for prefill,
+``decode_step`` for decode/long shapes. ``input_pspecs`` returns the
+matching PartitionSpec trees.
+
+Modality frontends are stubs per the assignment: whisper cells carry
+precomputed conv-stem frame embeddings [B, 1500, d_model]; qwen2-vl text
+cells carry token ids plus the 3-stream M-RoPE position ids.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSuite
+from repro.models.model import Model
+from repro.models.param import ParamDef, tree_abstract, tree_specs
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, suite: ShapeSuite
+                      ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    b, s = suite.global_batch, suite.seq_len
+    batch = {
+        "tokens": sds((b, s), jnp.int32),
+        "targets": sds((b, s), jnp.int32),
+    }
+    axes = {
+        "tokens": ("batch", None),
+        "targets": ("batch", None),
+    }
+    if cfg.family == "encdec":
+        batch["frames"] = sds((b, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+        axes["frames"] = ("batch", None, "act_embed")
+    if cfg.pos_scheme == "mrope":
+        batch["positions"] = sds((b, s, 3), jnp.int32)
+        axes["positions"] = ("batch", None, None)
+    return batch, axes
+
+
+def decode_inputs(model: Model, suite: ShapeSuite):
+    """(cache, token, index) abstract values + logical axes for decode."""
+    cfg = model.cfg
+    b = suite.global_batch
+    cache_defs = model.cache_defs(b, suite.seq_len)
+    cache = tree_abstract(cache_defs)
+    token = sds((b, 1), jnp.int32)
+    index = sds((), jnp.int32)
+    token_axes = ("batch", None)
+    return cache_defs, cache, token, index, token_axes
+
+
+def batch_pspecs(axes_tree, rules) -> Any:
+    def one(axes):
+        return P(*(rules.get(a, None) for a in axes))
+    return jax.tree.map(one, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple))

@@ -1,0 +1,2 @@
+from repro.models.model import Model, build_model  # noqa: F401
+from repro.models.sharding import ShardingCtx, default_rules, NULL_CTX  # noqa: F401

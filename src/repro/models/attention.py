@@ -1,0 +1,126 @@
+"""Attention: grouped-query (GQA/MQA) softmax attention in three regimes.
+
+  * ``attend_full``    — einsum path, fine up to ~8k tokens (training).
+  * ``attend_chunked`` — flash-style double lax.scan with online softmax;
+                         O(block²) peak memory, used for 32k prefill. This is
+                         the pure-JAX twin of ``kernels/flash_attention``.
+  * ``attend_decode``  — one query step against a KV cache with a length mask.
+
+All paths compute the softmax in f32 and respect GQA head grouping
+(q heads are grouped over kv heads; kv is *not* materialized per q head).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _group(q: jax.Array, n_kv: int) -> jax.Array:
+    """[B, S, Hq, d] -> [B, S, Hkv, G, d]."""
+    b, s, hq, d = q.shape
+    return q.reshape(b, s, n_kv, hq // n_kv, d)
+
+
+def attend_full(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                causal: bool, q_offset: int = 0,
+                scale: Optional[float] = None) -> jax.Array:
+    """q: [B, Sq, Hq, d]; k, v: [B, Skv, Hkv, d] -> [B, Sq, Hq, d]."""
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    scale = scale if scale is not None else d ** -0.5
+    qg = _group(q, hkv)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k).astype(jnp.float32) * scale
+    if causal:
+        qpos = q_offset + jnp.arange(sq)
+        kpos = jnp.arange(skv)
+        mask = qpos[:, None] >= kpos[None, :]
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v)
+    return out.reshape(b, sq, hq, d)
+
+
+def attend_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                   causal: bool, q_block: int = 1024, kv_block: int = 1024,
+                   scale: Optional[float] = None) -> jax.Array:
+    """Flash-style online-softmax attention, O(q_block*kv_block) peak scores.
+
+    Double scan: outer over query blocks, inner over KV blocks carrying the
+    running (max, normalizer, accumulator). Causal masking is applied per
+    block pair; fully-masked pairs still execute (static shapes) — the Pallas
+    kernel skips them on TPU and the roofline notes the 2x causal slack here.
+    """
+    b, sq, hq, d = q.shape
+    _, skv, hkv, _ = k.shape
+    assert sq % q_block == 0 and skv % kv_block == 0, (sq, skv)
+    scale = scale if scale is not None else d ** -0.5
+    g = hq // hkv
+    nq, nk = sq // q_block, skv // kv_block
+
+    qg = _group(q, hkv).reshape(b, nq, q_block, hkv, g, d)
+    kb = k.reshape(b, nk, kv_block, hkv, d)
+    vb = v.reshape(b, nk, kv_block, hkv, d)
+
+    qpos_base = jnp.arange(q_block)
+    kpos_base = jnp.arange(kv_block)
+
+    def q_step(_, qi):
+        qblk, qidx = qi                                   # [b,qb,hkv,g,d], []
+        qpos = qidx * q_block + qpos_base
+
+        def kv_step(carry, kvi):
+            m, l, acc = carry
+            kblk, vblk, kidx = kvi
+            s = jnp.einsum("bqhgd,bkhd->bhgqk", qblk, kblk)
+            s = s.astype(jnp.float32) * scale
+            if causal:
+                kpos = kidx * kv_block + kpos_base
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(qblk.dtype), vblk)
+            acc_new = acc * corr[..., None] + pv.astype(jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hkv, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, q_block, d), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (kb.swapaxes(0, 1), vb.swapaxes(0, 1), jnp.arange(nk)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        # [b,hkv,g,qb,d] -> [b,qb,hkv,g,d]
+        return None, out.transpose(0, 3, 1, 2, 4).astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None,
+                           (qg.swapaxes(0, 1), jnp.arange(nq)))
+    # outs: [nq, b, qb, hkv, g, d]
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, hq, d)
+    return out
+
+
+def attend_decode(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array, *,
+                  cache_len: jax.Array,
+                  scale: Optional[float] = None) -> jax.Array:
+    """One decode step. q: [B, 1, Hq, d]; caches: [B, S, Hkv, d];
+    cache_len: [] or [B] — number of valid cache positions (includes the
+    token being decoded, whose K/V must already be written).
+    """
+    b, _, hq, d = q.shape
+    _, s, hkv, _ = k_cache.shape
+    scale = scale if scale is not None else d ** -0.5
+    qg = _group(q, hkv)[:, 0]                             # [B, Hkv, G, d]
+    logits = jnp.einsum("bhgd,bkhd->bhgk", qg, k_cache).astype(jnp.float32)
+    logits = logits * scale
+    valid = jnp.arange(s)[None, :] < jnp.reshape(cache_len, (-1, 1))
+    logits = jnp.where(valid[:, None, None, :], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhgk,bkhd->bhgd", probs, v_cache)
+    return out.reshape(b, 1, hq, d)

@@ -1,0 +1,463 @@
+"""Transformer / SSM blocks. Every block is a pair (defs fn, apply fn)
+operating on explicit param pytrees; stacks scan over the leading "layers"
+axis of the defs.
+
+Cache conventions (decode):
+  attention  : {"k": [B, S, Hkv, hd], "v": [B, S, Hkv, hd]}
+  rwkv6      : {"state": [B, H, dk, dv] f32, "shift_tm": [B, D], "shift_cm": [B, D]}
+  mamba2     : {"state": [B, H, dk, dv] f32, "conv": [B, K-1, conv_dim]}
+Caches are stacked [L, ...] by the stack and scanned.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import gla
+from repro.models.attention import attend_chunked, attend_decode, attend_full
+from repro.models.layers import (apply_mrope, apply_rope, groupnorm_heads,
+                                 layernorm, mlp_defs, gelu_mlp, gelu_mlp_defs,
+                                 rmsnorm, swiglu_mlp)
+from repro.models.moe import moe_defs, moe_ffn
+from repro.models.param import ParamDef
+from repro.models.sharding import NULL_CTX, ShardingCtx
+
+CHUNKED_ATTN_THRESHOLD = 8192
+
+
+# ---------------------------------------------------------------------------
+# Self-attention (GQA) core, shared by dense/moe/vlm/hybrid/encdec blocks
+# ---------------------------------------------------------------------------
+
+def attn_defs(cfg: ModelConfig, layers: Optional[int] = None,
+              cross: bool = False, bias: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    hq, hkv = cfg.n_heads, cfg.n_kv_heads
+    lead = () if layers is None else (layers,)
+    lax_ = () if layers is None else ("layers",)
+    defs = {
+        "wq": ParamDef(lead + (d, hq * hd), lax_ + ("embed", "heads")),
+        "wk": ParamDef(lead + (d, hkv * hd), lax_ + ("embed", "kv_heads")),
+        "wv": ParamDef(lead + (d, hkv * hd), lax_ + ("embed", "kv_heads")),
+        "wo": ParamDef(lead + (hq * hd, d), lax_ + ("heads2", "embed_out")),
+    }
+    if bias:
+        defs["bq"] = ParamDef(lead + (hq * hd,), lax_ + ("heads",), init="zeros")
+        defs["bv"] = ParamDef(lead + (hkv * hd,), lax_ + ("kv_heads",), init="zeros")
+        defs["bo"] = ParamDef(lead + (d,), lax_ + ("embed",), init="zeros")
+    return defs
+
+
+def _project_qkv(params, x, cfg: ModelConfig, ctx: ShardingCtx):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"])
+    if "bq" in params:
+        q = q + params["bq"]
+        v = v + params["bv"]
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    # Constrain ONLY k/v: when kv_heads < the model axis the divisibility
+    # policy replicates them — otherwise GSPMD splits head_dim across the
+    # axis and every attention score matrix becomes a partial sum that must
+    # be ALL-REDUCED (measured: 932 GB/step of f32 score all-reduces on the
+    # 33B train cell). Q and the attention output stay propagation-driven:
+    # constraining them too forced ~7x more SP<->TP transitions.
+    k = ctx.constrain(k, ("batch", None, "kv_heads", None))
+    v = ctx.constrain(v, ("batch", None, "kv_heads", None))
+    return q, k, v
+
+
+def _apply_pos(q, k, cfg: ModelConfig, positions):
+    if cfg.pos_scheme == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.pos_scheme == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    return q, k
+
+
+def self_attention(params, x: jax.Array, cfg: ModelConfig, *,
+                   mode: str, positions, cache=None, cache_index=None,
+                   causal: bool = True, ctx: ShardingCtx = NULL_CTX):
+    """mode: train | prefill | decode. Returns (y, new_cache)."""
+    b = x.shape[0]
+    hd = cfg.resolved_head_dim
+    q, k, v = _project_qkv(params, x, cfg, ctx)
+    q, k = _apply_pos(q, k, cfg, positions)
+
+    new_cache = cache
+    if mode == "decode":
+        assert cache is not None
+        if ctx.rules.get("kv_seq") is not None:
+            # the cache's sequence dim is sharded: DUS at a dynamic index
+            # makes GSPMD gather the whole buffer (measured 0.46 s/token on
+            # the 33B decode cell). A one-hot masked update is elementwise
+            # => works under any sharding: one full read+write of the local
+            # shard (~10 ms at 33B) instead of a cross-shard gather.
+            onehot = (jnp.arange(cache["k"].shape[1]) == cache_index
+                      ).astype(cache["k"].dtype)[None, :, None, None]
+            k_cache = cache["k"] * (1 - onehot) + \
+                k.astype(cache["k"].dtype) * onehot
+            v_cache = cache["v"] * (1 - onehot) + \
+                v.astype(cache["v"].dtype) * onehot
+        else:
+            k_cache = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cache["k"].dtype),
+                (0, cache_index, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cache["v"].dtype),
+                (0, cache_index, 0, 0))
+        new_cache = {"k": k_cache, "v": v_cache}
+        out = attend_decode(q, k_cache, v_cache, cache_len=cache_index + 1)
+    else:
+        s = x.shape[1]
+        if s > CHUNKED_ATTN_THRESHOLD:
+            out = attend_chunked(q, k, v, causal=causal)
+        else:
+            out = attend_full(q, k, v, causal=causal)
+        if mode == "prefill":
+            new_cache = {"k": k.astype(jnp.bfloat16),
+                         "v": v.astype(jnp.bfloat16)}
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(b, -1, cfg.n_heads * hd),
+                   params["wo"])
+    if "bo" in params:
+        y = y + params["bo"]
+    return y, new_cache
+
+
+def cross_attention(params, x: jax.Array, enc_kv, cfg: ModelConfig, *,
+                    ctx: ShardingCtx = NULL_CTX):
+    """Whisper decoder cross-attention against precomputed encoder K/V."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"])
+    if "bq" in params:
+        q = q + params["bq"]
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    out = attend_full(q, enc_kv["k"], enc_kv["v"], causal=False)
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, cfg.n_heads * hd),
+                   params["wo"])
+    if "bo" in params:
+        y = y + params["bo"]
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Dense / MoE decoder block (pre-RMSNorm, SwiGLU or MoE FFN)
+# ---------------------------------------------------------------------------
+
+def decoder_block_defs(cfg: ModelConfig, layers: int):
+    defs = {
+        "ln1": ParamDef((layers, cfg.d_model), ("layers", "embed"), init="ones"),
+        "attn": attn_defs(cfg, layers),
+        "ln2": ParamDef((layers, cfg.d_model), ("layers", "embed"), init="ones"),
+    }
+    if cfg.moe is not None and cfg.moe.n_experts:
+        defs["moe"] = moe_defs(cfg.d_model, cfg.moe, layers)
+    else:
+        defs["mlp"] = mlp_defs(cfg.d_model, cfg.d_ff, layers)
+    return defs
+
+
+def decoder_block(params, x, cfg: ModelConfig, *, mode, positions,
+                  cache=None, cache_index=None, ctx: ShardingCtx = NULL_CTX):
+    h = rmsnorm(x, params["ln1"], cfg.norm_eps)
+    a, new_cache = self_attention(params["attn"], h, cfg, mode=mode,
+                                  positions=positions, cache=cache,
+                                  cache_index=cache_index, ctx=ctx)
+    x = x + a
+    h = rmsnorm(x, params["ln2"], cfg.norm_eps)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in params:
+        f, aux = moe_ffn(params["moe"], h, cfg.moe)
+    else:
+        f = swiglu_mlp(params["mlp"], h)
+        f = ctx.constrain(f, ("batch", "seq", "act_embed"))
+    x = x + f
+    x = ctx.constrain(x, ("batch", "seq", "act_embed"))
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# RWKV6 (Finch) block: data-dependent-decay time mix + channel mix
+# ---------------------------------------------------------------------------
+
+RWKV_LORA = 32
+
+
+def rwkv6_block_defs(cfg: ModelConfig, layers: int):
+    d = cfg.d_model
+    h = cfg.ssm.n_ssm_heads
+    dk = d // h
+    f = cfg.d_ff
+    L = layers
+    la = ("layers",)
+    return {
+        "ln1": ParamDef((L, d), la + ("embed",), init="ones"),
+        "ln2": ParamDef((L, d), la + ("embed",), init="ones"),
+        "tm": {
+            # token-shift interpolation coefficients for r,k,v,w,g
+            "mu": ParamDef((L, 5, d), la + (None, "embed")),
+            "w_base": ParamDef((L, d), la + ("embed",)),     # per-channel decay base
+            "w_lora_a": ParamDef((L, d, RWKV_LORA), la + ("embed", None)),
+            "w_lora_b": ParamDef((L, RWKV_LORA, d), la + (None, "embed"), init="zeros"),
+            "u": ParamDef((L, h, dk), la + ("heads", None)), # bonus
+            "wr": ParamDef((L, d, d), la + ("embed", "heads")),
+            "wk": ParamDef((L, d, d), la + ("embed", "heads")),
+            "wv": ParamDef((L, d, d), la + ("embed", "heads")),
+            "wg": ParamDef((L, d, d), la + ("embed", "heads")),
+            "wo": ParamDef((L, d, d), la + ("heads", "embed")),
+            "ln_x_w": ParamDef((L, d), la + ("embed",), init="ones"),
+            "ln_x_b": ParamDef((L, d), la + ("embed",), init="zeros"),
+        },
+        "cm": {
+            "mu_k": ParamDef((L, d), la + ("embed",)),
+            "mu_r": ParamDef((L, d), la + ("embed",)),
+            "wk": ParamDef((L, d, f), la + ("embed", "ff")),
+            "wv": ParamDef((L, f, d), la + ("ff", "embed")),
+            "wr": ParamDef((L, d, d), la + ("embed", "heads")),
+        },
+    }
+
+
+def _token_shift(x: jax.Array, prev: Optional[jax.Array]):
+    """x: [B, S, D] -> x shifted right by one token; position 0 sees ``prev``
+    (decode carry) or zeros."""
+    shifted = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    if prev is not None:
+        shifted = shifted.at[:, 0].set(prev.astype(x.dtype))
+    return shifted
+
+
+def rwkv6_time_mix(p, x, cfg: ModelConfig, *, mode, cache, ctx: ShardingCtx):
+    b, s, d = x.shape
+    h = cfg.ssm.n_ssm_heads
+    dk = d // h
+    prev = cache["shift_tm"] if cache is not None else None
+    xs = _token_shift(x, prev)
+    mu = p["mu"]                                          # [5, D]
+    mix = x[:, :, None, :] + (xs - x)[:, :, None, :] * mu[None, None]
+    xr, xk, xv, xw, xg = (mix[:, :, i] for i in range(5))
+    r = jnp.einsum("bsd,de->bse", xr, p["wr"]).reshape(b, s, h, dk)
+    k = jnp.einsum("bsd,de->bse", xk, p["wk"]).reshape(b, s, h, dk)
+    v = jnp.einsum("bsd,de->bse", xv, p["wv"]).reshape(b, s, h, dk)
+    g = jnp.einsum("bsd,de->bse", xg, p["wg"])
+    # data-dependent decay: w = exp(-exp(base + lora(xw)))
+    lora = jnp.einsum("bsd,dr->bsr", xw, p["w_lora_a"])
+    lora = jnp.einsum("bsr,rd->bsd", jnp.tanh(lora.astype(jnp.float32)).astype(x.dtype),
+                      p["w_lora_b"])
+    log_w = -jnp.exp(jnp.clip(p["w_base"].astype(jnp.float32) +
+                              lora.astype(jnp.float32), -8.0, 4.0))
+    log_w = log_w.reshape(b, s, h, dk)
+
+    if mode == "decode":
+        state = cache["state"]
+        o, new_state = gla.gla_step(r[:, 0], k[:, 0], v[:, 0], log_w[:, 0],
+                                    state, u=p["u"], inclusive=False)
+        out = o[:, None]                                   # [B,1,H,dk]
+        new_cache = {"state": new_state, "shift_tm": x[:, -1]}
+    else:
+        init = cache["state"] if cache is not None else None
+        # per-channel decay ratios cancel badly in bf16 (3.6% decode
+        # divergence measured) -> rwkv6 keeps f32 ratios; mamba2's scalar
+        # decay keeps the bf16 fast path (EXPERIMENTS.md SSPerf cell 2)
+        out, final_state = gla.gla_chunk(r, k, v, log_w, u=p["u"],
+                                         inclusive=False,
+                                         initial_state=init,
+                                         ratio_dtype=jnp.float32)
+        new_cache = (None if mode == "train"
+                     else {"state": final_state, "shift_tm": x[:, -1]})
+    y = out.reshape(b, s, d)
+    y = groupnorm_heads(y, p["ln_x_w"], p["ln_x_b"], h)
+    y = y * jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bsd,de->bse", y, p["wo"])
+    return y, new_cache
+
+
+def rwkv6_channel_mix(p, x, *, cache):
+    prev = cache["shift_cm"] if cache is not None else None
+    xs = _token_shift(x, prev)
+    xk = x + (xs - x) * p["mu_k"]
+    xr = x + (xs - x) * p["mu_r"]
+    k = jnp.einsum("bsd,df->bsf", xk, p["wk"])
+    k = jnp.square(jax.nn.relu(k.astype(jnp.float32))).astype(x.dtype)
+    kv = jnp.einsum("bsf,fd->bsd", k, p["wv"])
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["wr"]).astype(jnp.float32))
+    return (r.astype(x.dtype) * kv), x[:, -1]
+
+
+def rwkv6_block(params, x, cfg: ModelConfig, *, mode, positions=None,
+                cache=None, cache_index=None, ctx: ShardingCtx = NULL_CTX):
+    h = rmsnorm(x, params["ln1"], cfg.norm_eps)
+    a, tm_cache = rwkv6_time_mix(params["tm"], h, cfg, mode=mode,
+                                 cache=cache, ctx=ctx)
+    x = x + a
+    h = rmsnorm(x, params["ln2"], cfg.norm_eps)
+    f, shift_cm = rwkv6_channel_mix(params["cm"], h, cache=cache)
+    x = x + f
+    x = ctx.constrain(x, ("batch", "seq", "act_embed"))
+    new_cache = (None if mode == "train"
+                 else dict(tm_cache, shift_cm=shift_cm))
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD) block — used by zamba2 hybrid backbone
+# ---------------------------------------------------------------------------
+
+def mamba2_block_defs(cfg: ModelConfig, layers: int):
+    d = cfg.d_model
+    ssm = cfg.ssm
+    d_in = ssm.expand * d
+    nh = d_in // ssm.state_size if ssm.n_ssm_heads == 0 else ssm.n_ssm_heads
+    hd = d_in // nh
+    st = ssm.state_size
+    L = layers
+    la = ("layers",)
+    # in_proj emits [z (d_in), x (d_in), B (st), C (st), dt (nh)]
+    proj_out = 2 * d_in + 2 * st + nh
+    return {
+        "ln": ParamDef((L, d), la + ("embed",), init="ones"),
+        "in_proj": ParamDef((L, d, proj_out), la + ("embed", "heads")),
+        "conv_w": ParamDef((L, ssm.conv_kernel, d_in + 2 * st),
+                           la + (None, "heads"), scale=0.5),
+        "a_log": ParamDef((L, nh), la + ("heads",), init="zeros"),
+        "dt_bias": ParamDef((L, nh), la + ("heads",), init="zeros"),
+        "d_skip": ParamDef((L, nh), la + ("heads",), init="ones"),
+        "norm": ParamDef((L, d_in), la + ("heads",), init="ones"),
+        "out_proj": ParamDef((L, d_in, d), la + ("heads", "embed")),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, conv_state: Optional[jax.Array]):
+    """Depthwise causal conv. x: [B, S, C]; w: [K, C]. conv_state: [B, K-1, C]
+    carried for decode. Returns (y, new_conv_state)."""
+    k = w.shape[0]
+    if conv_state is None:
+        pad = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    else:
+        pad = conv_state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                 # [B, S+K-1, C]
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(k))
+    new_state = xp[:, -(k - 1):] if k > 1 else jnp.zeros_like(pad)
+    return jax.nn.silu(y.astype(jnp.float32)).astype(x.dtype), new_state
+
+
+def mamba2_block(params, x, cfg: ModelConfig, *, mode, positions=None,
+                 cache=None, cache_index=None, ctx: ShardingCtx = NULL_CTX):
+    b, s, d = x.shape
+    ssm = cfg.ssm
+    d_in = ssm.expand * d
+    st = ssm.state_size
+    nh = ssm.n_ssm_heads or (d_in // st)
+    hd = d_in // nh
+
+    h = rmsnorm(x, params["ln"], cfg.norm_eps)
+    zxbcdt = jnp.einsum("bsd,de->bse", h, params["in_proj"])
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + st, 2 * d_in + 2 * st], axis=-1)
+    conv_in = jnp.concatenate([xin, Bc, Cc], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, params["conv_w"], conv_state)
+    xin, Bc, Cc = jnp.split(conv_out, [d_in, d_in + st], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))  # [B,S,nh]
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))            # [nh]
+    log_w = (dt * a[None, None]).reshape(b, s, nh, 1)            # scalar/head
+    # k = B (shared across heads), v = dt * x, q = C
+    k = jnp.broadcast_to(Bc[:, :, None, :], (b, s, nh, st))
+    q = jnp.broadcast_to(Cc[:, :, None, :], (b, s, nh, st))
+    v = (xin.reshape(b, s, nh, hd).astype(jnp.float32) *
+         dt[..., None]).astype(x.dtype)
+    # decay is per-head scalar -> broadcast over the dk axis of k
+    log_w_full = jnp.broadcast_to(log_w, (b, s, nh, st))
+
+    if mode == "decode":
+        state = cache["state"]
+        o, new_state = gla.gla_step(q[:, 0], k[:, 0], v[:, 0],
+                                    log_w_full[:, 0], state, inclusive=True)
+        out = o[:, None]
+        new_cache = {"state": new_state, "conv": new_conv}
+    else:
+        init = cache["state"] if cache is not None else None
+        out, final = gla.gla_chunk(q, k, v, log_w_full, inclusive=True,
+                                   initial_state=init)
+        new_cache = (None if mode == "train"
+                     else {"state": final, "conv": new_conv})
+
+    y = out.reshape(b, s, d_in) + xin * jnp.repeat(
+        params["d_skip"], hd, axis=-1).astype(x.dtype)[None, None]
+    y = rmsnorm(y, params["norm"], cfg.norm_eps)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bse,ed->bsd", y, params["out_proj"])
+    x = x + y
+    x = ctx.constrain(x, ("batch", "seq", "act_embed"))
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Whisper encoder block (bidirectional, LayerNorm+bias, GELU MLP)
+# ---------------------------------------------------------------------------
+
+def encoder_block_defs(cfg: ModelConfig, layers: int):
+    d = cfg.d_model
+    la = ("layers",)
+    return {
+        "ln1_w": ParamDef((layers, d), la + ("embed",), init="ones"),
+        "ln1_b": ParamDef((layers, d), la + ("embed",), init="zeros"),
+        "attn": attn_defs(cfg, layers, bias=True),
+        "ln2_w": ParamDef((layers, d), la + ("embed",), init="ones"),
+        "ln2_b": ParamDef((layers, d), la + ("embed",), init="zeros"),
+        "mlp": gelu_mlp_defs(d, cfg.d_ff, layers),
+    }
+
+
+def encoder_block(params, x, cfg: ModelConfig, *, ctx: ShardingCtx = NULL_CTX):
+    h = layernorm(x, params["ln1_w"], params["ln1_b"], cfg.norm_eps)
+    a, _ = self_attention(params["attn"], h, cfg, mode="train",
+                          positions=None, causal=False, ctx=ctx)
+    x = x + a
+    h = layernorm(x, params["ln2_w"], params["ln2_b"], cfg.norm_eps)
+    x = x + gelu_mlp(params["mlp"], h)
+    return ctx.constrain(x, ("batch", "seq", "act_embed"))
+
+
+def decoder_xattn_block_defs(cfg: ModelConfig, layers: int):
+    d = cfg.d_model
+    la = ("layers",)
+    return {
+        "ln1_w": ParamDef((layers, d), la + ("embed",), init="ones"),
+        "ln1_b": ParamDef((layers, d), la + ("embed",), init="zeros"),
+        "attn": attn_defs(cfg, layers, bias=True),
+        "lnx_w": ParamDef((layers, d), la + ("embed",), init="ones"),
+        "lnx_b": ParamDef((layers, d), la + ("embed",), init="zeros"),
+        "xattn": attn_defs(cfg, layers, bias=True),
+        "ln2_w": ParamDef((layers, d), la + ("embed",), init="ones"),
+        "ln2_b": ParamDef((layers, d), la + ("embed",), init="zeros"),
+        "mlp": gelu_mlp_defs(d, cfg.d_ff, layers),
+    }
+
+
+def decoder_xattn_block(params, x, enc_kv, cfg: ModelConfig, *, mode,
+                        positions=None, cache=None, cache_index=None,
+                        ctx: ShardingCtx = NULL_CTX):
+    h = layernorm(x, params["ln1_w"], params["ln1_b"], cfg.norm_eps)
+    a, new_cache = self_attention(params["attn"], h, cfg, mode=mode,
+                                  positions=positions, cache=cache,
+                                  cache_index=cache_index, ctx=ctx)
+    x = x + a
+    h = layernorm(x, params["lnx_w"], params["lnx_b"], cfg.norm_eps)
+    x = x + cross_attention(params["xattn"], h, enc_kv, cfg, ctx=ctx)
+    h = layernorm(x, params["ln2_w"], params["ln2_b"], cfg.norm_eps)
+    x = x + gelu_mlp(params["mlp"], h)
+    x = ctx.constrain(x, ("batch", "seq", "act_embed"))
+    return x, new_cache, jnp.zeros((), jnp.float32)

@@ -1,0 +1,128 @@
+"""Gated linear recurrence (chunked), shared by RWKV6 and Mamba2/SSD.
+
+Recurrence per head (state S in R^{dk x dv}):
+
+    S_t = diag(w_t) @ S_{t-1} + k_t v_t^T            (w_t in (0,1])
+    o_t = q_t @ (S_{t-1} + diag(u) k_t v_t^T)        lag=1 w/ bonus  (RWKV6)
+    o_t = q_t @ S_t                                  lag=0           (Mamba2)
+
+The O(T) chunked form processes C tokens at a time: an intra-chunk masked
+"attention" term with cumulative-decay ratios plus an inter-chunk term
+against the carried state, then a chunk-level state update via lax.scan.
+All decay arithmetic is done on log-decay in f32 with masking *before*
+exponentiation so strongly-decaying channels cannot overflow.
+
+This module is the pure-jnp oracle; ``repro.kernels.gla_chunk`` is the
+Pallas TPU kernel with the identical contract.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def gla_chunk(q: jax.Array, k: jax.Array, v: jax.Array,
+              log_w: jax.Array, *,
+              u: Optional[jax.Array] = None,
+              inclusive: bool = False,
+              chunk: int = 64,
+              initial_state: Optional[jax.Array] = None,
+              ratio_dtype=jnp.bfloat16,
+              ) -> Tuple[jax.Array, jax.Array]:
+    """q,k,log_w: [B, S, H, dk]; v: [B, S, H, dv]; u: [H, dk] or None.
+
+    Returns (out [B, S, H, dv], final_state [B, H, dk, dv]).
+    ``inclusive=False`` reads the state *before* the current token (RWKV6,
+    combined with the ``u`` bonus for the diagonal); ``inclusive=True``
+    reads the state after the update (Mamba2 — pass ``u=None``).
+    """
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    s_orig = s
+    if s % chunk:
+        # pad with k=0 (no state contribution), log_w=0 (w=1: state frozen)
+        pad = chunk - s % chunk
+        padfn = lambda x: jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q, k, v = padfn(q), padfn(k), padfn(v)
+        log_w = padfn(log_w)
+        s += pad
+    n = s // chunk
+
+    qc = q.reshape(b, n, chunk, h, dk).transpose(1, 0, 3, 2, 4)  # [n,b,h,C,dk]
+    kc = k.reshape(b, n, chunk, h, dk).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, n, chunk, h, dv).transpose(1, 0, 3, 2, 4)
+    lw = log_w.reshape(b, n, chunk, h, dk).transpose(1, 0, 3, 2, 4)
+    lw = lw.astype(jnp.float32)
+
+    lag = 0 if inclusive else 1
+    t_idx = jnp.arange(chunk)
+    # valid (t, i) pairs: i <= t - lag
+    pair_mask = t_idx[:, None] >= (t_idx[None, :] + lag)
+
+    def step(S, xs):
+        qb, kb, vb, lwb = xs                       # [b,h,C,*]
+        L = jnp.cumsum(lwb, axis=2)                # inclusive cumulative log-decay
+        # decay from chunk entry to the state the query reads
+        Lq = L if inclusive else L - lwb           # L_{t} or L_{t-1}
+        qf = qb.astype(jnp.float32)
+        kf = kb.astype(jnp.float32)
+        vf = vb.astype(jnp.float32)
+
+        # ---- inter-chunk: q_t (decayed) @ S_in
+        q_dec = qf * jnp.exp(Lq)                   # Lq <= 0 -> safe
+        inter = jnp.einsum("bhtk,bhkv->bhtv", q_dec, S)
+
+        # ---- intra-chunk: A[t,i] = sum_d q_td k_id exp(Lq_t,d - L_i,d).
+        # The [C,C,dk] ratio tensor is the jnp path's HBM hot spot (the
+        # Pallas kernel keeps it VMEM-resident); exp stays f32 for safety,
+        # the contraction runs in bf16 — halves the dominant tensor's
+        # traffic at <1e-3 relative error (EXPERIMENTS.md SSPerf).
+        diff = Lq[:, :, :, None, :] - L[:, :, None, :, :]   # [b,h,t,i,dk]
+        diff = jnp.where(pair_mask[None, None, :, :, None], diff, NEG_INF)
+        ratios = jnp.exp(diff).astype(ratio_dtype)
+        A = jnp.einsum("bhtd,bhid,bhtid->bhti",
+                       qf.astype(ratio_dtype), kf.astype(ratio_dtype),
+                       ratios).astype(jnp.float32)
+        intra = jnp.einsum("bhti,bhiv->bhtv", A, vf)
+
+        out = inter + intra
+        if u is not None:                          # RWKV6 current-token bonus
+            qu = qf * u.astype(jnp.float32)[None, :, None, :]
+            dot = jnp.einsum("bhtd,bhtd->bht", qu, kf)
+            out = out + dot[..., None] * vf
+
+        # ---- state update: S_out = diag(exp(L_C)) S_in + sum_i k_i exp(L_C-L_i) v_i
+        Ltot = L[:, :, -1:, :]                     # [b,h,1,dk]
+        k_dec = kf * jnp.exp(Ltot - L)             # <= 0 -> safe
+        S_new = jnp.exp(Ltot.squeeze(2))[..., None] * S + \
+            jnp.einsum("bhtk,bhtv->bhkv", k_dec, vf)
+        return S_new, out
+
+    S0 = (initial_state.astype(jnp.float32) if initial_state is not None
+          else jnp.zeros((b, h, dk, dv), jnp.float32))
+    S_final, outs = jax.lax.scan(step, S0, (qc, kc, vc, lw))
+    # outs: [n, b, h, C, dv] -> [B, S, H, dv]
+    out = outs.transpose(1, 0, 3, 2, 4).reshape(b, s, h, dv)[:, :s_orig]
+    return out.astype(v.dtype), S_final
+
+
+def gla_step(q: jax.Array, k: jax.Array, v: jax.Array, log_w: jax.Array,
+             state: jax.Array, *,
+             u: Optional[jax.Array] = None,
+             inclusive: bool = False) -> Tuple[jax.Array, jax.Array]:
+    """Single recurrent step (decode). q,k,log_w: [B, H, dk]; v: [B, H, dv];
+    state: [B, H, dk, dv] (f32). Returns (o [B, H, dv], new_state)."""
+    qf, kf, vf = (x.astype(jnp.float32) for x in (q, k, v))
+    w = jnp.exp(log_w.astype(jnp.float32))
+    kv = kf[..., :, None] * vf[..., None, :]          # [B,H,dk,dv]
+    S_new = w[..., None] * state + kv
+    read = S_new if inclusive else state
+    o = jnp.einsum("bhk,bhkv->bhv", qf, read)
+    if u is not None:
+        dot = jnp.einsum("bhk,bhk->bh", qf * u.astype(jnp.float32)[None], kf)
+        o = o + dot[..., None] * vf
+    return o.astype(v.dtype), S_new

@@ -1,0 +1,153 @@
+"""Shared neural-net layers: norms, rotary embeddings (RoPE / M-RoPE /
+sinusoidal), SwiGLU MLP, embedding/unembedding. All pure functions over
+explicit param pytrees; f32 accumulation inside norms/softmaxes, bf16 tensors.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import ParamDef
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+def groupnorm_heads(x: jax.Array, weight: jax.Array, bias: jax.Array,
+                    n_heads: int, eps: float = 64e-5) -> jax.Array:
+    """GroupNorm with one group per head over the last dim (RWKV ln_x)."""
+    *lead, d = x.shape
+    xg = x.reshape(*lead, n_heads, d // n_heads).astype(jnp.float32)
+    mu = jnp.mean(xg, axis=-1, keepdims=True)
+    var = jnp.var(xg, axis=-1, keepdims=True)
+    y = ((xg - mu) * jax.lax.rsqrt(var + eps)).reshape(*lead, d)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary / positional
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., seq, heads, head_dim]; positions: [..., seq] (int32)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections: Tuple[int, int, int] = (1, 1, 2)) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: the rotary dims are split into (t, h, w)
+    sections, each rotated by its own position stream.
+
+    x: [..., seq, heads, head_dim]; positions: [..., seq, 3] (t, h, w).
+    ``sections`` gives relative widths; for text all three streams coincide
+    and M-RoPE reduces to standard RoPE (verified in tests).
+    """
+    hd = x.shape[-1]
+    half = hd // 2
+    total = sum(sections)
+    widths = [half * s // total for s in sections]
+    widths[-1] = half - sum(widths[:-1])
+    freqs = rope_freqs(hd, theta)                       # [half]
+    # angle per rotary channel, selecting the position stream per section
+    ang_parts = []
+    start = 0
+    for i, w in enumerate(widths):
+        pos_i = positions[..., i].astype(jnp.float32)   # [..., S]
+        ang_parts.append(pos_i[..., :, None] * freqs[start:start + w])
+        start += w
+    ang = jnp.concatenate(ang_parts, axis=-1)           # [..., S, half]
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_pos(seq: int, d_model: int, offset=0) -> jax.Array:
+    """``offset`` may be a traced scalar (decode position)."""
+    pos = (jnp.arange(seq, dtype=jnp.float32) +
+           jnp.asarray(offset, jnp.float32))[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    ang = pos / jnp.power(10000.0, dim / d_model)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_defs(d_model: int, d_ff: int, layers: Optional[int] = None):
+    lead = () if layers is None else (layers,)
+    lax_ = () if layers is None else ("layers",)
+    return {
+        "w_gate": ParamDef(lead + (d_model, d_ff), lax_ + ("embed", "ff")),
+        "w_up": ParamDef(lead + (d_model, d_ff), lax_ + ("embed", "ff")),
+        "w_down": ParamDef(lead + (d_ff, d_model), lax_ + ("ff2", "embed_out")),
+    }
+
+
+def swiglu_mlp(params, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+def gelu_mlp(params, x: jax.Array) -> jax.Array:
+    """2-matrix GELU MLP (whisper)."""
+    h = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+def gelu_mlp_defs(d_model: int, d_ff: int, layers: Optional[int] = None):
+    lead = () if layers is None else (layers,)
+    lax_ = () if layers is None else ("layers",)
+    return {
+        "w_up": ParamDef(lead + (d_model, d_ff), lax_ + ("embed", "ff")),
+        "w_down": ParamDef(lead + (d_ff, d_model), lax_ + ("ff2", "embed_out")),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed(table: jax.Array, ids: jax.Array) -> jax.Array:
+    return jnp.take(table, ids, axis=0)
+
+
+def unembed(table: jax.Array, x: jax.Array) -> jax.Array:
+    """Logits in f32 (loss-stability)."""
+    return jnp.einsum("...d,vd->...v", x.astype(jnp.float32),
+                      table.astype(jnp.float32))

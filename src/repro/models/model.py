@@ -1,0 +1,405 @@
+"""Unified model API over all assigned architecture families.
+
+``Model(cfg)`` builds a ParamDef tree once; from it we derive materialized
+params (CPU tests), abstract params (dry-run), and PartitionSpecs (launch).
+``forward`` covers three modes:
+
+  train   — full-sequence causal LM (or enc-dec) forward, returns logits
+  prefill — like train but also returns a populated KV/state cache
+  decode  — one token against a donated cache
+
+All stacks ``lax.scan`` over stacked layer params so HLO size is
+depth-independent; per-layer bodies are optionally ``jax.checkpoint``-ed.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import blocks
+from repro.models.layers import embed, sinusoidal_pos, unembed
+from repro.models.param import ParamDef, tree_abstract, tree_init, tree_specs
+from repro.models.sharding import NULL_CTX, ShardingCtx
+
+
+def _positions_for(cfg: ModelConfig, b: int, s: int, offset) -> Optional[jax.Array]:
+    if cfg.pos_scheme == "mrope":
+        pos = offset + jnp.arange(s, dtype=jnp.int32)
+        pos = jnp.broadcast_to(pos[None, :, None], (b, s, 3))
+        return pos
+    if cfg.pos_scheme in ("rope",):
+        pos = offset + jnp.arange(s, dtype=jnp.int32)
+        return jnp.broadcast_to(pos[None], (b, s))
+    return None
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.defs = self._build_defs()
+
+    # ------------------------------------------------------------------ defs
+    def _build_defs(self):
+        cfg = self.cfg
+        d = {
+            "embed": ParamDef((cfg.padded_vocab, cfg.d_model),
+                              ("vocab", "embed"), scale=1.0),
+            "final_norm": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+        }
+        if not cfg.tie_embeddings:
+            d["unembed"] = ParamDef((cfg.padded_vocab, cfg.d_model),
+                                    ("vocab", "embed"))
+        fam = cfg.family
+        if fam in ("dense", "moe", "vlm"):
+            d["layers"] = blocks.decoder_block_defs(cfg, cfg.n_layers)
+        elif fam == "ssm":
+            d["layers"] = blocks.rwkv6_block_defs(cfg, cfg.n_layers)
+        elif fam == "hybrid":
+            d["layers"] = blocks.mamba2_block_defs(cfg, cfg.n_layers)
+            shared_cfg = cfg  # same dims for the shared attention block
+            d["shared"] = {
+                "fuse": ParamDef((2 * cfg.d_model, cfg.d_model),
+                                 (None, "embed")),
+                "ln1": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+                "attn": blocks.attn_defs(shared_cfg, None),
+                "ln2": ParamDef((cfg.d_model,), ("embed",), init="ones"),
+                "mlp": {
+                    "w_gate": ParamDef((cfg.d_model, cfg.d_ff), ("embed", "ff")),
+                    "w_up": ParamDef((cfg.d_model, cfg.d_ff), ("embed", "ff")),
+                    "w_down": ParamDef((cfg.d_ff, cfg.d_model), ("ff", "embed")),
+                },
+            }
+        elif fam == "encdec":
+            d["enc_layers"] = blocks.encoder_block_defs(cfg, cfg.n_enc_layers)
+            d["enc_final_w"] = ParamDef((cfg.d_model,), ("embed",), init="ones")
+            d["enc_final_b"] = ParamDef((cfg.d_model,), ("embed",), init="zeros")
+            d["layers"] = blocks.decoder_xattn_block_defs(cfg, cfg.n_layers)
+        else:
+            raise ValueError(fam)
+        return d
+
+    # -------------------------------------------------------------- params
+    def init(self, key) -> Any:
+        return tree_init(self.defs, key)
+
+    def abstract(self) -> Any:
+        return tree_abstract(self.defs)
+
+    def specs(self, rules, mesh=None) -> Any:
+        return tree_specs(self.defs, rules, mesh)
+
+    # --------------------------------------------------------------- caches
+    def n_shared_apps(self) -> int:
+        cfg = self.cfg
+        if cfg.family != "hybrid" or not cfg.shared_attn_every:
+            return 0
+        return cfg.n_layers // cfg.shared_attn_every
+
+    def cache_defs(self, batch: int, seq: int) -> Any:
+        """ParamDef-shaped description of the decode cache (for specs /
+        abstract construction). seq = max cache length."""
+        cfg = self.cfg
+        L = cfg.n_layers
+        hd = cfg.resolved_head_dim
+        fam = cfg.family
+
+        def kv(layers, s, h):
+            return {
+                "k": ParamDef((layers, batch, s, h, hd),
+                              ("layers", "batch", "kv_seq", "kv_heads", None),
+                              init="zeros"),
+                "v": ParamDef((layers, batch, s, h, hd),
+                              ("layers", "batch", "kv_seq", "kv_heads", None),
+                              init="zeros"),
+            }
+
+        if fam in ("dense", "moe", "vlm"):
+            return kv(L, seq, cfg.n_kv_heads)
+        if fam == "ssm":
+            h = cfg.ssm.n_ssm_heads
+            dk = cfg.d_model // h
+            return {
+                "state": ParamDef((L, batch, h, dk, dk),
+                                  ("layers", "batch", "heads", None, None),
+                                  init="zeros", dtype=jnp.float32),
+                "shift_tm": ParamDef((L, batch, cfg.d_model),
+                                     ("layers", "batch", "embed"), init="zeros"),
+                "shift_cm": ParamDef((L, batch, cfg.d_model),
+                                     ("layers", "batch", "embed"), init="zeros"),
+            }
+        if fam == "hybrid":
+            ssm = cfg.ssm
+            d_in = ssm.expand * cfg.d_model
+            nh = ssm.n_ssm_heads or (d_in // ssm.state_size)
+            conv_dim = d_in + 2 * ssm.state_size
+            cache = {
+                "mamba": {
+                    "state": ParamDef((L, batch, nh, ssm.state_size, d_in // nh),
+                                      ("layers", "batch", "heads", None, None),
+                                      init="zeros", dtype=jnp.float32),
+                    "conv": ParamDef((L, batch, ssm.conv_kernel - 1, conv_dim),
+                                     ("layers", "batch", None, "heads"),
+                                     init="zeros"),
+                },
+            }
+            napp = self.n_shared_apps()
+            if napp:
+                cache["shared"] = kv(napp, seq, cfg.n_kv_heads)
+            return cache
+        if fam == "encdec":
+            c = kv(L, seq, cfg.n_kv_heads)
+            c_enc = {
+                "xk": ParamDef((L, batch, cfg.enc_seq, cfg.n_kv_heads, hd),
+                               ("layers", "batch", None, "kv_heads", None),
+                               init="zeros"),
+                "xv": ParamDef((L, batch, cfg.enc_seq, cfg.n_kv_heads, hd),
+                               ("layers", "batch", None, "kv_heads", None),
+                               init="zeros"),
+            }
+            return {**c, **c_enc}
+        raise ValueError(fam)
+
+    def init_cache(self, batch: int, seq: int) -> Any:
+        return jax.tree.map(lambda d: jnp.zeros(d.shape, d.dtype),
+                            self.cache_defs(batch, seq),
+                            is_leaf=lambda x: isinstance(x, ParamDef))
+
+    # -------------------------------------------------------------- forward
+    def forward(self, params, batch: Dict[str, jax.Array], *, mode: str,
+                cache=None, cache_index=None,
+                ctx: ShardingCtx = NULL_CTX) -> Tuple[jax.Array, Any, jax.Array]:
+        """Returns (logits, new_cache, aux_loss). In decode mode logits cover
+        the single new token."""
+        cfg = self.cfg
+        fam = cfg.family
+        if fam == "encdec":
+            return self._forward_encdec(params, batch, mode=mode, cache=cache,
+                                        cache_index=cache_index, ctx=ctx)
+
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embed(params["embed"], tokens)
+        x = ctx.constrain(x, ("batch", "seq", "act_embed"))
+        offset = cache_index if mode == "decode" else 0
+        positions = batch.get("positions")
+        if positions is None:
+            positions = _positions_for(cfg, b, s, offset)
+
+        block_fn = {
+            "dense": blocks.decoder_block, "moe": blocks.decoder_block,
+            "vlm": blocks.decoder_block, "ssm": blocks.rwkv6_block,
+            "hybrid": blocks.mamba2_block,
+        }[fam]
+
+        if fam == "hybrid":
+            x, new_cache, aux = self._hybrid_stack(
+                params, x, mode=mode, positions=positions, cache=cache,
+                cache_index=cache_index, ctx=ctx)
+        else:
+            x, new_cache, aux = self._scan_stack(
+                params["layers"], block_fn, x, mode=mode, positions=positions,
+                cache=cache, cache_index=cache_index, ctx=ctx)
+
+        from repro.models.layers import rmsnorm
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        logits = unembed(table, x)
+        if cfg.padded_vocab != cfg.vocab:
+            logits = logits[..., :cfg.vocab]   # drop TP-padding columns
+        logits = ctx.constrain(logits, ("batch", "seq", "act_vocab"))
+        return logits, new_cache, aux
+
+    # ------------------------------------------------------------ stacks
+    def _scan_stack(self, layer_params, block_fn, x, *, mode, positions,
+                    cache, cache_index, ctx):
+        """Blocks return a None cache in train mode, a fresh per-layer cache
+        in prefill mode, and an updated cache in decode mode; ``None`` is an
+        empty pytree so lax.scan threads all three uniformly."""
+        cfg = self.cfg
+
+        def body(carry, xs):
+            h, aux = carry
+            lp, lc = xs
+            y, new_lc, a = block_fn(lp, h, cfg, mode=mode, positions=positions,
+                                    cache=lc, cache_index=cache_index, ctx=ctx)
+            return (y, aux + a), new_lc
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux), new_cache = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)), (layer_params, cache))
+        return x, new_cache, aux
+
+    def _hybrid_stack(self, params, x, *, mode, positions, cache,
+                      cache_index, ctx):
+        """Zamba2: Mamba2 backbone with a single *shared* attention block
+        applied after every ``shared_attn_every`` layers. The shared block
+        consumes concat(hidden, initial_embedding) — the paper's 'master
+        data consulted by every partition' pattern."""
+        cfg = self.cfg
+        k = cfg.shared_attn_every
+        napp = self.n_shared_apps()
+        n_main = napp * k
+        x0 = x
+
+        mamba_params = params["layers"]
+        main_p = jax.tree.map(lambda a: a[:n_main].reshape(
+            (napp, k) + a.shape[1:]), mamba_params)
+        rest_p = jax.tree.map(lambda a: a[n_main:], mamba_params)
+
+        m_cache = cache["mamba"] if cache is not None else None
+        main_c = (jax.tree.map(lambda a: a[:n_main].reshape(
+            (napp, k) + a.shape[1:]), m_cache) if m_cache is not None else None)
+        rest_c = (jax.tree.map(lambda a: a[n_main:], m_cache)
+                  if m_cache is not None else None)
+        shared_c = cache.get("shared") if cache is not None else None
+
+        shared_p = params["shared"]
+
+        def apply_shared(h, sc):
+            z = jnp.concatenate([h, x0], axis=-1)
+            z = jnp.einsum("bsd,de->bse", z, shared_p["fuse"])
+            from repro.models.layers import rmsnorm, swiglu_mlp
+            hh = rmsnorm(z, shared_p["ln1"], cfg.norm_eps)
+            a, new_sc = blocks.self_attention(
+                shared_p["attn"], hh, cfg, mode=mode, positions=positions,
+                cache=sc, cache_index=cache_index, ctx=ctx)
+            z = z + a
+            hh = rmsnorm(z, shared_p["ln2"], cfg.norm_eps)
+            z = z + swiglu_mlp(shared_p["mlp"], hh)
+            return h + z, new_sc
+
+        def group_body(h, xs):
+            gp, gc, sc = xs
+
+            def inner(c2, xs2):
+                lp, lc = xs2
+                y, nlc, _ = blocks.mamba2_block(
+                    lp, c2, cfg, mode=mode, positions=positions, cache=lc,
+                    cache_index=cache_index, ctx=ctx)
+                return y, nlc
+
+            h, g_new = jax.lax.scan(inner, h, (gp, gc))
+            h, new_sc = apply_shared(h, sc)
+            return h, (g_new, new_sc)
+
+        if cfg.remat:
+            group_body = jax.checkpoint(group_body)
+
+        x, (main_new, shared_new) = jax.lax.scan(
+            group_body, x, (main_p, main_c, shared_c))
+
+        # trailing layers (n_layers % k)
+        n_rest = cfg.n_layers - n_main
+        rest_new = None
+        if n_rest:
+            def rest_body(c2, xs2):
+                lp, lc = xs2
+                y, nlc, _ = blocks.mamba2_block(
+                    lp, c2, cfg, mode=mode, positions=positions, cache=lc,
+                    cache_index=cache_index, ctx=ctx)
+                return y, nlc
+            if cfg.remat:
+                rest_body = jax.checkpoint(rest_body)
+            x, rest_new = jax.lax.scan(rest_body, x, (rest_p, rest_c))
+
+        new_cache = None
+        if mode != "train":
+            main_flat = jax.tree.map(
+                lambda a: a.reshape((n_main,) + a.shape[2:]), main_new)
+            if n_rest:
+                mamba_new = jax.tree.map(
+                    lambda a, b_: jnp.concatenate([a, b_], 0),
+                    main_flat, rest_new)
+            else:
+                mamba_new = main_flat
+            new_cache = {"mamba": mamba_new}
+            if shared_new is not None:
+                new_cache["shared"] = shared_new
+        return x, new_cache, jnp.zeros((), jnp.float32)
+
+    # ------------------------------------------------------------ enc-dec
+    def _forward_encdec(self, params, batch, *, mode, cache, cache_index, ctx):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+
+        if mode in ("train", "prefill"):
+            frames = batch["frames"]                   # [B, enc_seq, D] stub
+            h = frames + sinusoidal_pos(frames.shape[1], cfg.d_model
+                                        ).astype(frames.dtype)[None]
+            h = ctx.constrain(h, ("batch", "seq", "act_embed"))
+
+            def enc_body(carry, lp):
+                return blocks.encoder_block(lp, carry, cfg, ctx=ctx), None
+            if cfg.remat:
+                enc_body = jax.checkpoint(enc_body)
+            h, _ = jax.lax.scan(enc_body, h, params["enc_layers"])
+            from repro.models.layers import layernorm
+            enc_out = layernorm(h, params["enc_final_w"], params["enc_final_b"],
+                                cfg.norm_eps)
+            # per-decoder-layer encoder K/V
+            hd = cfg.resolved_head_dim
+
+            def enc_kv_of(lp):
+                ek = jnp.einsum("bsd,dh->bsh", enc_out, lp["xattn"]["wk"])
+                ev = jnp.einsum("bsd,dh->bsh", enc_out, lp["xattn"]["wv"])
+                ev = ev + lp["xattn"]["bv"]
+                return (ek.reshape(b, -1, cfg.n_kv_heads, hd),
+                        ev.reshape(b, -1, cfg.n_kv_heads, hd))
+            enc_k, enc_v = jax.vmap(enc_kv_of)(params["layers"])  # [L, B, S, H, hd]
+        else:
+            enc_k, enc_v = cache["xk"], cache["xv"]
+
+        x = embed(params["embed"], tokens)
+        offset = cache_index if mode == "decode" else 0
+        x = x + sinusoidal_pos(s, cfg.d_model, offset if mode == "decode" else 0
+                               ).astype(x.dtype)[None]
+        x = ctx.constrain(x, ("batch", "seq", "act_embed"))
+
+        self_cache = None
+        if cache is not None:
+            self_cache = {"k": cache["k"], "v": cache["v"]}
+
+        def body(carry, xs):
+            h, aux = carry
+            lp, lc, ek, ev = xs
+            y, new_lc, a = blocks.decoder_xattn_block(
+                lp, h, {"k": ek, "v": ev}, cfg, mode=mode, positions=None,
+                cache=lc, cache_index=cache_index, ctx=ctx)
+            return (y, aux + a), new_lc
+
+        if cfg.remat:
+            body = jax.checkpoint(body)
+        (x, aux), kv_new = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.float32)),
+            (params["layers"], self_cache, enc_k, enc_v))
+
+        from repro.models.layers import rmsnorm
+        x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+        table = params["embed"] if cfg.tie_embeddings else params["unembed"]
+        logits = unembed(table, x)
+        if cfg.padded_vocab != cfg.vocab:
+            logits = logits[..., :cfg.vocab]   # drop TP-padding columns
+        logits = ctx.constrain(logits, ("batch", "seq", "act_vocab"))
+
+        new_cache = None
+        if mode == "prefill":
+            new_cache = {"k": kv_new["k"], "v": kv_new["v"],
+                         "xk": enc_k.astype(jnp.bfloat16),
+                         "xv": enc_v.astype(jnp.bfloat16)}
+        elif mode == "decode":
+            new_cache = {"k": kv_new["k"], "v": kv_new["v"],
+                         "xk": enc_k, "xv": enc_v}
+        return logits, new_cache, aux
+
+
+@functools.lru_cache(maxsize=32)
+def build_model(arch: str, smoke: bool = False) -> Model:
+    from repro.configs import get_config, get_smoke_config
+    cfg = get_smoke_config(arch) if smoke else get_config(arch)
+    return Model(cfg)

@@ -1,0 +1,132 @@
+"""Mixture-of-Experts FFN with GShard-style grouped einsum dispatch.
+
+Tokens are reshaped into groups; within each group every token picks its
+top-k experts, positions are assigned by cumulative count up to a fixed
+capacity (over-capacity tokens drop — standard GShard), and dispatch /
+combine are one-hot einsums that GSPMD turns into all-to-alls when the
+expert dimension is sharded over the ``model``/expert axis.
+
+DOD-ETL tie-in: this is the same key->partition discipline as the paper's
+message queue — a token is a message, the router key is the business key,
+experts are partitions, capacity is the consumer's per-partition buffer.
+``repro.core.partitioning`` reuses the same position-assignment helper.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.param import ParamDef
+
+
+def moe_defs(d_model: int, cfg: MoEConfig, layers: Optional[int] = None):
+    lead = () if layers is None else (layers,)
+    lax_ = () if layers is None else ("layers",)
+    e, fe = cfg.padded_experts, cfg.d_ff_expert
+    defs = {
+        "router": ParamDef(lead + (d_model, e), lax_ + ("embed", None),
+                           dtype=jnp.float32),
+        "w_gate": ParamDef(lead + (e, d_model, fe),
+                           lax_ + ("experts", "embed", "ff_expert")),
+        "w_up": ParamDef(lead + (e, d_model, fe),
+                         lax_ + ("experts", "embed", "ff_expert")),
+        "w_down": ParamDef(lead + (e, fe, d_model),
+                           lax_ + ("experts", "ff_expert", "embed")),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * fe
+        defs["shared"] = {
+            "w_gate": ParamDef(lead + (d_model, fs), lax_ + ("embed", "ff")),
+            "w_up": ParamDef(lead + (d_model, fs), lax_ + ("embed", "ff")),
+            "w_down": ParamDef(lead + (fs, d_model), lax_ + ("ff", "embed")),
+        }
+    return defs
+
+
+def assign_positions(expert_idx: jax.Array, n_experts: int, capacity: int
+                     ) -> Tuple[jax.Array, jax.Array]:
+    """Per-group slot assignment. expert_idx: [S_assignments] int32 (already
+    flattened (token, k) pairs in priority order). Returns (position [S],
+    keep_mask [S]). Position is the running count of prior assignments to
+    the same expert; assignments beyond capacity are dropped.
+    """
+    onehot = jax.nn.one_hot(expert_idx, n_experts, dtype=jnp.int32)
+    pos = jnp.cumsum(onehot, axis=0) - 1                 # [S, E]
+    position = jnp.sum(pos * onehot, axis=-1)            # [S]
+    keep = position < capacity
+    return position, keep
+
+
+def moe_ffn(params, x: jax.Array, cfg: MoEConfig,
+            ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, D] -> (out [B, S, D], aux_loss scalar).
+
+    Grouped dispatch: [groups, group_size, D] -> one-hot dispatch
+    [G, S, E, C] -> expert compute [E, G*C, D] -> combine.
+    """
+    b, s, d = x.shape
+    e, k = cfg.padded_experts, cfg.top_k
+    tokens = x.reshape(-1, d)
+    n_tok = tokens.shape[0]
+    gs = min(cfg.group_size, n_tok)
+    while n_tok % gs:            # largest divisor of n_tok <= group_size
+        gs -= 1
+    g = n_tok // gs
+    capacity = max(int(gs * k * cfg.capacity_factor / cfg.n_experts), 1)
+    # round capacity to a multiple of 4 for layout friendliness
+    capacity = (capacity + 3) // 4 * 4
+
+    xt = tokens.reshape(g, gs, d)
+    logits = jnp.einsum("gsd,de->gse", xt.astype(jnp.float32),
+                        params["router"].astype(jnp.float32))
+    if e != cfg.n_experts:
+        # padded (dummy) experts exist only for EP divisibility: unroutable
+        pad_mask = jnp.arange(e) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, None], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)              # [g, gs, e]
+
+    topv, topi = jax.lax.top_k(probs, k)                 # [g, gs, k]
+    topv = topv / jnp.clip(jnp.sum(topv, -1, keepdims=True), 1e-9)
+
+    # --- load-balancing aux loss (Switch): mean_prob * mean_assign per expert
+    me = jnp.mean(probs, axis=(0, 1))                    # [e]
+    assign1 = jax.nn.one_hot(topi[..., 0], e)
+    ce = jnp.mean(assign1, axis=(0, 1))
+    aux = jnp.sum(me * ce) * e * cfg.router_aux_weight
+
+    # --- position assignment per group, k-major priority (GShard)
+    flat_idx = topi.transpose(0, 2, 1).reshape(g, k * gs)   # priority: k slot 0 first
+    def per_group(idx):
+        return assign_positions(idx, e, capacity)
+    position, keep = jax.vmap(per_group)(flat_idx)        # [g, k*gs]
+    position = position.reshape(g, k, gs).transpose(0, 2, 1)  # [g, gs, k]
+    keep = keep.reshape(g, k, gs).transpose(0, 2, 1)
+
+    gate = topv * keep                                    # dropped -> 0 weight
+    # dispatch tensor [g, gs, e, c]
+    disp = (jax.nn.one_hot(topi, e, dtype=x.dtype)[..., None] *
+            jax.nn.one_hot(position, capacity, dtype=x.dtype)[..., None, :] *
+            keep[..., None, None].astype(x.dtype)).sum(axis=2)
+    comb = (jax.nn.one_hot(topi, e, dtype=jnp.float32)[..., None] *
+            jax.nn.one_hot(position, capacity, dtype=jnp.float32)[..., None, :] *
+            gate[..., None, None]).sum(axis=2)
+
+    # expert inputs: [e, g, c, d]  (a2a when e is sharded over the model axis)
+    xe = jnp.einsum("gsd,gsec->egcd", xt, disp)
+    h_g = jnp.einsum("egcd,edf->egcf", xe, params["w_gate"])
+    h_u = jnp.einsum("egcd,edf->egcf", xe, params["w_up"])
+    h = jax.nn.silu(h_g.astype(jnp.float32)).astype(x.dtype) * h_u
+    ye = jnp.einsum("egcf,efd->egcd", h, params["w_down"])
+    out = jnp.einsum("egcd,gsec->gsd", ye.astype(jnp.float32), comb)
+    out = out.reshape(b, s, d).astype(x.dtype)
+
+    if cfg.n_shared_experts:
+        sh = params["shared"]
+        gsh = jnp.einsum("bsd,df->bsf", x, sh["w_gate"])
+        ush = jnp.einsum("bsd,df->bsf", x, sh["w_up"])
+        hsh = jax.nn.silu(gsh.astype(jnp.float32)).astype(x.dtype) * ush
+        out = out + jnp.einsum("bsf,fd->bsd", hsh, sh["w_down"])
+    return out, aux

@@ -1,0 +1,107 @@
+"""Parameter definition machinery.
+
+Every parameter is declared once as a ``ParamDef`` carrying its shape, its
+*logical* axis names and an init function. From one tree of ParamDefs we
+derive, without duplication:
+
+  * materialized params           (``init``)
+  * abstract params               (``abstract`` — ShapeDtypeStructs, no alloc;
+                                   this is what the multi-pod dry-run uses)
+  * a PartitionSpec tree          (``specs`` — logical axes -> mesh axes)
+
+Logical axis vocabulary (mapped to mesh axes by ``repro.launch.mesh`` rules):
+  "vocab", "embed", "heads", "kv_heads", "head_dim", "ff", "ff_expert",
+  "experts", "layers", "state", "batch", "seq", None
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+Shape = Tuple[int, ...]
+Axes = Tuple[Optional[str], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Shape
+    axes: Axes
+    init: str = "normal"      # "normal" | "zeros" | "ones" | "small"
+    scale: float = 1.0
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _materialize(defn: ParamDef, key) -> jax.Array:
+    if defn.init == "zeros":
+        return jnp.zeros(defn.shape, defn.dtype)
+    if defn.init == "ones":
+        return jnp.ones(defn.shape, defn.dtype)
+    # truncated-normal fan-in scaling
+    fan_in = defn.shape[-2] if len(defn.shape) >= 2 else defn.shape[-1]
+    std = defn.scale / math.sqrt(max(fan_in, 1))
+    x = jax.random.truncated_normal(key, -2.0, 2.0, defn.shape, jnp.float32)
+    return (x * std).astype(defn.dtype)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_init(defs, key):
+    """Materialize a tree of ParamDefs with per-leaf folded keys."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_materialize(d, k) for d, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def tree_abstract(defs):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=is_def
+    )
+
+
+def tree_specs(defs, rules: Dict[Optional[str], Any], mesh=None):
+    """Logical-axis names -> PartitionSpec via the mesh rule table.
+
+    With ``mesh`` given, a mesh axis is dropped for any dim *smaller* than
+    the axis size (sharding a size-8 dim 16 ways degenerates to involuntary
+    rematerialization in GSPMD); dims >= the axis size are kept and padded.
+    """
+    axis_sizes = (dict(zip(mesh.axis_names, mesh.devices.shape))
+                  if mesh is not None else {})
+
+    def axsize(mesh_axes) -> int:
+        if mesh_axes is None:
+            return 1
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        n = 1
+        for a in mesh_axes:
+            n *= axis_sizes.get(a, 1)
+        return n
+
+    def one(d: ParamDef) -> P:
+        out = []
+        for a, dim in zip(d.axes, d.shape):
+            mesh_axes = rules.get(a, None)
+            if mesh is not None and mesh_axes is not None \
+                    and dim < axsize(mesh_axes):
+                mesh_axes = None
+            out.append(mesh_axes)
+        return P(*out)
+
+    return jax.tree.map(one, defs, is_leaf=is_def)
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return int(sum(math.prod(d.shape) for d in leaves))

@@ -1,0 +1,112 @@
+"""Sharding context: one table mapping *logical* axis names to mesh axes.
+
+Models never import mesh details; they call ``ctx.constrain(x, axes)`` on
+activations and the launcher derives parameter PartitionSpecs from the same
+table (``repro.models.param.tree_specs``). With no mesh (CPU smoke tests)
+every call is the identity.
+
+Default rule table (single pod, mesh ("data", "model")):
+    batch      -> data            DP: batch / business-key partitions
+    seq        -> None            (or "model" under sequence-parallel resid)
+    embed      -> None            (or "data" under FSDP for params)
+    heads      -> model           TP attention
+    kv_heads   -> model
+    ff         -> model           TP mlp
+    ff_expert  -> None            (expert-parallel already splits experts)
+    experts    -> model           EP
+    vocab      -> model
+    layers     -> None
+    state      -> None
+    kv_seq     -> None            (or "model": SP KV cache for 500k decode)
+
+Multi-pod meshes extend "batch" to ("pod", "data").
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def default_rules(multi_pod: bool = False, *,
+                  fsdp: bool = False,
+                  seq_parallel: bool = False,
+                  second_matmul: str = "row",
+                  kv_seq_shard: bool = False) -> Dict[str, Any]:
+    batch = ("pod", "data") if multi_pod else "data"
+    rules: Dict[str, Any] = {
+        "batch": batch,
+        "seq": "model" if seq_parallel else None,
+        "embed": "data" if fsdp else None,   # param input dim (FSDP/ZeRO-3)
+        "act_embed": None,                   # activation feature dim
+        # logits vocab dim: TP normally; under SP the seq dim owns "model"
+        "act_vocab": None if seq_parallel else "model",
+        "heads": "model",
+        "kv_heads": "model",
+        "head_dim": None,
+        "ff": "model",
+        # second matmul of each pair (wo / w_down): "row" = Megatron
+        # (input dim sharded, output all-reduced); "col" = output-dim
+        # sharded (activation gathers instead of weight gathers)
+        "ff2": "model" if second_matmul == "row" else None,
+        "heads2": "model" if second_matmul == "row" else None,
+        "embed_out": "model" if second_matmul == "col" else None,
+        "ff_expert": None,
+        "experts": "model",
+        "vocab": "model",
+        "layers": None,
+        "state": None,
+        "kv_seq": "model" if kv_seq_shard else None,
+        None: None,
+    }
+    return rules
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    mesh: Optional[Mesh] = None
+    rules: Dict[str, Any] = dataclasses.field(default_factory=default_rules)
+
+    def spec(self, axes: Sequence[Optional[str]]) -> P:
+        return P(*(self.rules.get(a, None) for a in axes))
+
+    def _axis_size(self, mesh_axes) -> int:
+        if mesh_axes is None:
+            return 1
+        if isinstance(mesh_axes, str):
+            mesh_axes = (mesh_axes,)
+        size = 1
+        for a in mesh_axes:
+            size *= dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[a]
+        return size
+
+    def spec_for_shape(self, axes: Sequence[Optional[str]],
+                       shape: Sequence[int]) -> P:
+        """Like ``spec`` but drops a mesh axis whenever the tensor dim is
+        *smaller* than it (sharding a size-1/8 dim 16 ways forces GSPMD into
+        involuntary full rematerialization). Dims >= axis size but not
+        divisible are kept: GSPMD pads, which is the lesser waste."""
+        out = []
+        for a, dim in zip(axes, shape):
+            mesh_axes = self.rules.get(a, None)
+            if mesh_axes is not None and dim < self._axis_size(mesh_axes):
+                mesh_axes = None
+            out.append(mesh_axes)
+        return P(*out)
+
+    def constrain(self, x: jax.Array, axes: Sequence[Optional[str]]) -> jax.Array:
+        if self.mesh is None:
+            return x
+        assert len(axes) == x.ndim, (axes, x.shape)
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, self.spec_for_shape(axes, x.shape)))
+
+    def sharding(self, axes: Sequence[Optional[str]]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(axes))
+
+
+NULL_CTX = ShardingCtx()

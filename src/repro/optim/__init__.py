@@ -1,0 +1,9 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig,
+    AdamWState,
+    abstract_state,
+    apply_updates,
+    global_norm,
+    init_state,
+    schedule,
+)

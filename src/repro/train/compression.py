@@ -1,0 +1,54 @@
+"""Gradient compression for the cross-pod (DCN) axis — beyond-paper
+distributed-optimization trick recorded in EXPERIMENTS.md §Perf.
+
+int8 error-feedback quantization: per-tensor scale = max|g| / 127, residual
+(g - dequant(quant(g))) is carried to the next step so the compression is
+unbiased over time (the EF-SGD scheme from the gradient-compression
+literature, restricted to the slow pod axis where 4x fewer bytes directly
+cuts the cross-DCN collective term).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jax.Array, residual: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (quantized int8, scale, new_residual)."""
+    gf = g.astype(jnp.float32) + residual
+    scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    return q, scale, gf - deq
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def make_ef_compressor(init_params):
+    """Stateful-by-closure error-feedback compressor over a grad pytree.
+    Returns (compress_fn, get_state, set_state); compress_fn quantizes +
+    dequantizes each leaf (the wire between would be the int8 all-reduce on
+    the pod axis — GSPMD emits the collective on the constrained output)."""
+    state = {"residual": jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), init_params)}
+
+    def compress(grads):
+        new_res = {}
+        outs = {}
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_r = jax.tree.leaves(state["residual"])
+        out_leaves, res_leaves = [], []
+        for g, r in zip(flat_g, flat_r):
+            q, s, nr = compress_int8(g, r)
+            out_leaves.append(decompress_int8(q, s))
+            res_leaves.append(nr)
+        state["residual"] = jax.tree.unflatten(treedef, res_leaves)
+        return jax.tree.unflatten(treedef, out_leaves)
+
+    return compress, lambda: state["residual"], \
+        lambda r: state.update(residual=r)

@@ -1,0 +1,36 @@
+"""Serving steps: batched prefill and single-token decode with a donated
+KV/state cache. ``decode_32k`` / ``long_500k`` dry-run cells lower
+``decode_step`` (one new token against a seq_len-deep cache).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import Model
+from repro.models.sharding import NULL_CTX, ShardingCtx
+
+
+def make_prefill_step(model: Model, ctx: ShardingCtx = NULL_CTX):
+    def prefill_step(params, batch: Dict[str, jax.Array]):
+        logits, cache, _ = model.forward(params, batch, mode="prefill", ctx=ctx)
+        # greedy next token from the last position
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return prefill_step
+
+
+def make_decode_step(model: Model, ctx: ShardingCtx = NULL_CTX):
+    def decode_step(params, cache, token: jax.Array, index: jax.Array):
+        """token: [B, 1] int32; index: [] int32 — position being decoded.
+        Returns (next_token [B], logits [B, V], new_cache). ``cache`` should
+        be donated by the caller's jit."""
+        batch = {"tokens": token}
+        logits, new_cache, _ = model.forward(
+            params, batch, mode="decode", cache=cache, cache_index=index,
+            ctx=ctx)
+        next_tok = jnp.argmax(logits[:, 0], axis=-1).astype(jnp.int32)
+        return next_tok, logits[:, 0], new_cache
+    return decode_step

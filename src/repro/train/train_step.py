@@ -1,0 +1,93 @@
+"""Training step: microbatched gradient accumulation (scan), next-token
+cross-entropy, ZeRO-sharded AdamW update, optional cross-pod gradient
+compression hook.
+
+The returned ``train_step(params, opt_state, batch)`` is jit-compatible and
+is what the multi-pod dry-run lowers for ``train_4k`` cells.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import Model
+from repro.models.sharding import NULL_CTX, ShardingCtx
+from repro.optim import AdamWConfig, AdamWState, apply_updates
+
+
+def cross_entropy(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    """logits: [B, S, V] f32; targets: [B, S] int32. Mean CE over tokens."""
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)
+
+
+def _split_microbatches(batch: Dict[str, jax.Array], n_mb: int):
+    def split(x):
+        b = x.shape[0]
+        assert b % n_mb == 0, (b, n_mb)
+        return x.reshape((n_mb, b // n_mb) + x.shape[1:])
+    return jax.tree.map(split, batch)
+
+
+def make_loss_fn(model: Model, ctx: ShardingCtx = NULL_CTX):
+    def loss_fn(params, mb: Dict[str, jax.Array]):
+        logits, _, aux = model.forward(params, mb, mode="train", ctx=ctx)
+        loss = cross_entropy(logits, mb["targets"])
+        return loss + aux, (loss, aux)
+    return loss_fn
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig,
+                    ctx: ShardingCtx = NULL_CTX,
+                    grad_specs=None,
+                    compress_fn=None):
+    """grad_specs: optional PartitionSpec tree to constrain accumulated
+    grads (ZeRO-2: shard accumulation over the data axis).
+    compress_fn: optional (grads -> grads) hook applied once per step before
+    the optimizer — e.g. int8 error-feedback compression on the pod axis.
+    """
+    cfg = model.cfg
+    loss_fn = make_loss_fn(model, ctx)
+    vg = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def constrain_grads(g):
+        if grad_specs is None or ctx.mesh is None:
+            return g
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(
+                x, jax.sharding.NamedSharding(ctx.mesh, s)), g, grad_specs)
+
+    def train_step(params, opt_state: AdamWState, batch: Dict[str, jax.Array]
+                   ) -> Tuple[Any, AdamWState, Dict[str, jax.Array]]:
+        n_mb = max(cfg.microbatches, 1)
+        mbs = _split_microbatches(batch, n_mb)
+
+        # Explicit per-microbatch value_and_grad + accumulation. Under pure
+        # GSPMD this pays a gradient all-reduce per microbatch (XLA cannot
+        # defer the reduction across scan iterations) — the shard_map manual
+        # DP step in repro.train.manual_dp removes exactly that cost; both
+        # are measured in EXPERIMENTS.md §Perf.
+        def mb_step(carry, mb):
+            g_acc, loss_acc = carry
+            (tot, (loss, aux)), g = vg(params, mb)
+            g = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32),
+                             g_acc, constrain_grads(g))
+            return (g, loss_acc + loss), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        g0 = constrain_grads(g0)
+        (grads, loss_sum), _ = jax.lax.scan(mb_step, (g0, 0.0), mbs)
+        grads = jax.tree.map(lambda g: g / n_mb, grads)
+        if compress_fn is not None:
+            grads = compress_fn(grads)
+        new_params, new_opt, metrics = apply_updates(opt_cfg, params, grads,
+                                                     opt_state)
+        metrics["loss"] = loss_sum / n_mb
+        return new_params, new_opt, metrics
+
+    return train_step

@@ -1,0 +1,164 @@
+"""End-to-end behaviour tests for DOD-ETL (the paper's system)."""
+import numpy as np
+import pytest
+
+from repro.configs.dod_etl import steelworks_config
+from repro.core import (BaselineStreamProcessor, DODETLPipeline,
+                        SourceDatabase, RecordBatch)
+from repro.data.sampler import SamplerConfig, SteelworksSampler
+
+
+def build_pipeline(n_records=1500, n_workers=3, n_partitions=6,
+                   late_frac=0.05, complex_model=False, join_depth=1):
+    cfg = steelworks_config(n_partitions=n_partitions,
+                            complex_model=complex_model)
+    src = SourceDatabase()
+    sampler = SteelworksSampler(cfg, SamplerConfig(
+        records_per_table=n_records, n_equipment=n_partitions,
+        late_master_frac=late_frac))
+    sampler.generate(src)
+    pipe = DODETLPipeline(cfg, src, n_workers=n_workers,
+                          join_depth=join_depth)
+    return cfg, src, pipe
+
+
+def test_pipeline_end_to_end_processes_every_record():
+    cfg, src, pipe = build_pipeline()
+    pipe.extract()
+    pipe.bootstrap_caches()
+    done = pipe.run_to_completion()
+    assert done == 1500                       # every production record lands
+    assert pipe.warehouse.rows_loaded == 1500
+    assert all(len(w.buffer) == 0 for w in pipe.workers)
+
+
+def test_no_source_lookbacks():
+    """DOD-ETL's core property: extraction touches only the CDC log."""
+    cfg, src, pipe = build_pipeline()
+    pipe.extract()
+    pipe.bootstrap_caches()
+    pipe.run_to_completion()
+    assert src.lookup_count == 0
+    assert src.scan_count == 0
+
+
+def test_late_master_data_goes_through_buffer():
+    """Out-of-sync arrival (paper §3.2): operational records whose master
+    rows lag are buffered, then eventually processed with referential
+    integrity."""
+    cfg, src, pipe = build_pipeline(late_frac=0.2)
+    # extract only the head of the log (master tail not yet extracted)
+    for listener in pipe.tracker.listeners:
+        listener.poll(limit=4000)
+    pipe.bootstrap_caches()
+    pipe.step()
+    buffered_mid = sum(w.transformer.records_late for w in pipe.workers)
+    assert buffered_mid > 0                  # some records were early
+    pipe.extract()                           # the late master tail arrives
+    pipe.run_to_completion()
+    assert pipe.warehouse.rows_loaded == 1500
+    assert all(len(w.buffer) == 0 for w in pipe.workers)
+    # referential integrity: every loaded fact was marked valid
+    assert (pipe.warehouse.fact_table()[:, -1] > 0.5).all()
+
+
+def test_fault_tolerance_consistency():
+    """Paper §4.1.3: kill 2 of 5 workers mid-run; processing completes with
+    zero consistency errors (facts match a single-worker oracle run)."""
+    cfg, src, pipe = build_pipeline(n_workers=5, n_partitions=10,
+                                    n_records=1200)
+    pipe.extract()
+    pipe.bootstrap_caches()
+    pipe.step(max_records_per_partition=30)   # partial progress
+    redump = pipe.fail_workers(["w1", "w3"])
+    assert redump >= 0.0
+    assert len(pipe.workers) == 3
+    pipe.run_to_completion()
+    assert pipe.warehouse.rows_loaded == 1200
+
+    # oracle: same workload, one worker, no failure
+    cfg2, src2, pipe2 = build_pipeline(n_workers=1, n_partitions=10,
+                                       n_records=1200)
+    pipe2.extract()
+    pipe2.bootstrap_caches()
+    pipe2.run_to_completion()
+    a = pipe.warehouse.fact_table()
+    b = pipe2.warehouse.fact_table()
+    order = lambda t: t[np.lexsort((t[:, 1], t[:, 0]))]
+    np.testing.assert_allclose(order(a), order(b), rtol=1e-5, atol=1e-5)
+
+
+def test_elastic_scale_up_down():
+    from repro.runtime.cluster import SimulatedCluster
+    cfg, src, pipe = build_pipeline(n_workers=2, n_partitions=8)
+    cluster = SimulatedCluster(pipe)
+    pipe.extract()
+    pipe.bootstrap_caches()
+    cluster.run_round(max_records_per_partition=40)
+    cluster.scale_to(4)
+    assert len(pipe.workers) == 4
+    cluster.run_round()
+    cluster.scale_to(2)
+    assert len(pipe.workers) == 2
+    pipe.run_to_completion()
+    assert pipe.warehouse.rows_loaded == 1500
+
+
+def test_checkpoint_restart_resumes_stream():
+    """Restart from a checkpoint resumes exactly (no loss, no dupes)."""
+    cfg, src, pipe = build_pipeline(n_records=800, n_workers=2,
+                                    n_partitions=4)
+    pipe.extract()
+    pipe.bootstrap_caches()
+    pipe.step(max_records_per_partition=50)
+    state = pipe.checkpoint()
+    rows_before = pipe.warehouse.rows_loaded
+
+    # "crash": rebuild the pipeline from scratch, restore, continue
+    pipe2 = DODETLPipeline(cfg, src, n_workers=2)
+    pipe2.tracker = pipe.tracker  # same already-extracted queue? no:
+    # restore against a fresh pipeline on the same queue state
+    pipe2 = DODETLPipeline(cfg, src, n_workers=2)
+    pipe2.queue = pipe.queue
+    for w in pipe2.workers:
+        w.queue = pipe.queue
+    pipe2.restore(state)
+    pipe2.bootstrap_caches()
+    pipe2.run_to_completion()
+    total = rows_before + pipe2.warehouse.rows_loaded
+    assert total == 800, f"{rows_before} + {pipe2.warehouse.rows_loaded}"
+
+
+def test_baseline_matches_dodetl_output():
+    """The baseline (source look-backs, record-at-a-time) computes the SAME
+    facts — it is only slower (Table 2)."""
+    cfg, src, pipe = build_pipeline(n_records=300, n_workers=1,
+                                    n_partitions=4, late_frac=0.0)
+    pipe.extract()
+    pipe.bootstrap_caches()
+    pipe.run_to_completion()
+
+    baseline = BaselineStreamProcessor(cfg, src)
+    prod_tid = [t.name for t in cfg.tables].index("production")
+    batches = []
+    for b in src.log._batches:
+        mine = b.filter(b.table_id == prod_tid)
+        if len(mine):
+            batches.append(mine)
+    facts_b = np.concatenate([baseline.process(b) for b in batches])
+    assert src.lookup_count > 0               # baseline DID hammer the source
+    a = pipe.warehouse.fact_table()
+    order = lambda t: t[np.lexsort((t[:, 1], t[:, 0]))]
+    np.testing.assert_allclose(order(a)[:, 3:7], order(facts_b)[:, 3:7],
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_complex_model_still_correct():
+    """ISA-95-style normalized schema (join_depth > 1) processes fully
+    (paper §4.1.4: slower, not wrong)."""
+    cfg, src, pipe = build_pipeline(n_records=400, complex_model=True,
+                                    join_depth=3)
+    pipe.extract()
+    pipe.bootstrap_caches()
+    pipe.run_to_completion()
+    assert pipe.warehouse.rows_loaded == 400
