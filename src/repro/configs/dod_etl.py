@@ -31,6 +31,8 @@ class ETLConfig:
     buffer_capacity: int = 1024  # late-message ring buffer entries
     queue_retention: int = 1 << 20
     seed: int = 0
+    backend: str = ""            # compute backend: "numpy" | "jax" | "pallas"
+                                 # ("" = DODETL_BACKEND env var, else "jax")
 
     def table(self, name: str) -> TableConfig:
         for t in self.tables:
@@ -47,7 +49,8 @@ class ETLConfig:
         return tuple(t for t in self.tables if t.nature == "master")
 
 
-def steelworks_config(n_partitions: int = 20, complex_model: bool = False) -> ETLConfig:
+def steelworks_config(n_partitions: int = 20, complex_model: bool = False,
+                      backend: str = "") -> ETLConfig:
     """The paper's steelworks deployment (§4).
 
     ``complex_model=True`` approximates the ISA-95 production workload of
@@ -78,7 +81,7 @@ def steelworks_config(n_partitions: int = 20, complex_model: bool = False) -> ET
             for part in ("segment", "event", "detail")
         )
     return ETLConfig(tables=tables, n_partitions=n_partitions,
-                     n_business_keys=n_partitions)
+                     n_business_keys=n_partitions, backend=backend)
 
 
 # KPI definitions (paper §4): OEE = availability * performance * quality.

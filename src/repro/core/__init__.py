@@ -6,6 +6,12 @@ Transformer = transformer + buffer, Target Database Updater = loader),
 wired by pipeline; baseline is the unmodified-framework comparison point.
 """
 from repro.core.records import RecordBatch, make_batch, PAYLOAD_WIDTH  # noqa: F401
+from repro.core.backend import (  # noqa: F401
+    ComputeBackend,
+    available_backends,
+    get_backend,
+    register_backend,
+)
 from repro.core.cdc import ChangeLog, SourceDatabase  # noqa: F401
 from repro.core.message_queue import MessageQueue, Topic, TopicConfig  # noqa: F401
 from repro.core.listener import ChangeTracker, Listener  # noqa: F401

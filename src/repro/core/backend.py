@@ -1,0 +1,349 @@
+"""Compute-backend layer: the pluggable numeric engine of the Stream
+Processor (paper §3.3 technology-independence, made literal).
+
+Every hot op of the Data Transformer / In-memory Table Updater is expressed
+against the ``ComputeBackend`` protocol:
+
+  * ``hash_probe``     — open-addressing probe of the in-memory master cache
+                         (the streaming join of §3.1.2),
+  * ``transform``      — the fused fact-grain transform: both cache probes +
+                         interval intersection (Fig. 3) + OEE KPI math (§4),
+  * ``segment_reduce`` — per-equipment KPI rollup of a fact block (the OLAP
+                         aggregate the Target Database Updater feeds).
+
+Three registered implementations:
+
+  ``numpy``   pure-host reference (no jit, no device) — the oracle,
+  ``jax``     jitted jnp (XLA; CPU/GPU/TPU via jax.default_backend),
+  ``pallas``  TPU Pallas kernels (``hash_join`` / ``segment_kpi``),
+              interpret-mode on CPU.
+
+Selection order: explicit name > ``ETLConfig.backend`` > the
+``DODETL_BACKEND`` environment variable > ``"jax"``. A fourth backend is a
+subclass + ``@register_backend("name")`` — see ARCHITECTURE.md.
+
+All protocol boundaries are host numpy arrays; device residency is an
+implementation detail of each backend (the jax/pallas backends mirror the
+cache to device lazily via ``InMemoryTable.device_state``).
+"""
+from __future__ import annotations
+
+import os
+from typing import Dict, Optional, Tuple, Type, Union
+
+import numpy as np
+
+from repro.core.records import PAYLOAD_WIDTH
+
+EPS = 1e-6
+DEFAULT_BACKEND = "jax"
+ENV_VAR = "DODETL_BACKEND"
+
+# fact layout produced by every backend's ``transform`` (keep in sync with
+# repro.core.transformer.FACT_COLUMNS)
+N_FACT = 10
+KPI_LANES = 5   # availability, performance, quality, oee, count
+
+
+class ComputeBackend:
+    """Protocol + shared helpers. Subclass and register to add a backend."""
+
+    name: str = "abstract"
+    device: bool = False     # True: wants the cache's device-mirrored state
+
+    # ------------------------------------------------------------- protocol
+    def hash_probe(self, query_keys, keys_tbl, vals_tbl, txn_tbl
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Linear-probe ``query_keys`` against an open-addressing table.
+        Returns host (values [n, W] f32, found [n] bool, txn [n])."""
+        raise NotImplementedError
+
+    def transform(self, prod: np.ndarray, equipment, quality, *,
+                  join_depth: int = 1
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+        """Fused fact-grain transform of production payloads [n, 8] against
+        the ``InMemoryTable`` caches. Returns host (facts [n, N_FACT] f32,
+        found [n] bool). ``join_depth > 1`` replays the probe chain (§4.1.4
+        complexity knob — numerically a no-op, cost is the point)."""
+        raise NotImplementedError
+
+    def segment_reduce(self, facts: np.ndarray, n_units: int) -> np.ndarray:
+        """Per-equipment KPI rollup of a fact block: sums
+        [availability, performance, quality, oee, count] over valid facts.
+        Returns host [n_units, KPI_LANES] f32."""
+        raise NotImplementedError
+
+    # -------------------------------------------------------------- helpers
+    @staticmethod
+    def _pad_bucket(prod: np.ndarray, floor: int = 1) -> np.ndarray:
+        """Pad a payload block to a power-of-two bucket (>= floor) so jitted
+        dispatch compiles once per bucket, not once per arrival size."""
+        n = len(prod)
+        bucket = max(floor, 1 << (n - 1).bit_length())
+        if bucket == n:
+            return prod
+        padrow = np.full((bucket - n, prod.shape[1]), -1.0, np.float32)
+        return np.concatenate([prod, padrow])
+
+
+_REGISTRY: Dict[str, Type[ComputeBackend]] = {}
+_INSTANCES: Dict[str, ComputeBackend] = {}
+
+
+def register_backend(name: str):
+    def deco(cls: Type[ComputeBackend]) -> Type[ComputeBackend]:
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+    return deco
+
+
+def available_backends() -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_backend_name(name: Optional[str] = None) -> str:
+    return name or os.environ.get(ENV_VAR) or DEFAULT_BACKEND
+
+
+def get_backend(name: Union[str, ComputeBackend, None] = None
+                ) -> ComputeBackend:
+    """Resolve a backend instance (singletons per name). Accepts an already
+    constructed backend, a registered name, None (config/env default)."""
+    if isinstance(name, ComputeBackend):
+        return name
+    resolved = resolve_backend_name(name)
+    if resolved not in _REGISTRY:
+        raise KeyError(f"unknown backend {resolved!r}; "
+                       f"registered: {available_backends()}")
+    if resolved not in _INSTANCES:
+        _INSTANCES[resolved] = _REGISTRY[resolved]()
+    return _INSTANCES[resolved]
+
+
+# =========================================================== numpy backend
+@register_backend("numpy")
+class NumpyBackend(ComputeBackend):
+    """Pure-host reference. Mirrors the jitted math op-for-op in float32 so
+    parity with jax/pallas holds to ~1e-6; the correctness oracle and the
+    zero-dependency fallback."""
+
+    device = False
+
+    def hash_probe(self, query_keys, keys_tbl, vals_tbl, txn_tbl):
+        from repro.core.cache import MAX_PROBES, hash32_np
+        keys_tbl = np.asarray(keys_tbl)
+        vals_tbl = np.asarray(vals_tbl)
+        txn_tbl = np.asarray(txn_tbl)
+        n_slots = keys_tbl.shape[0]
+        q = (np.asarray(query_keys).astype(np.int64)
+             & 0xFFFFFFFF).astype(np.int32)
+        h = (hash32_np(q) % np.uint32(n_slots)).astype(np.int64)
+        n = len(q)
+        done = np.zeros(n, bool)
+        found = np.zeros(n, bool)
+        val = np.zeros((n, vals_tbl.shape[1]), np.float32)
+        txn = np.zeros(n, txn_tbl.dtype)
+        for p in range(MAX_PROBES):
+            cand = (h + p) % n_slots
+            k = keys_tbl[cand]
+            hit = (k == q) & ~done
+            empty = (k == -1) & ~done
+            if hit.any():
+                val[hit] = vals_tbl[cand[hit]]
+                txn[hit] = txn_tbl[cand[hit]]
+                found |= hit
+            done |= hit | empty
+            if done.all():
+                break
+        return val, found, txn
+
+    def transform(self, prod, equipment, quality, *, join_depth=1):
+        prod = np.asarray(prod, np.float32)
+        eq_state = (equipment.keys, equipment.values, equipment.txn)
+        q_state = (quality.keys, quality.values, quality.txn)
+        equip_id = prod[:, 1].astype(np.int64)
+        prod_id = prod[:, 0].astype(np.int64)
+        eq_rows, eq_found, _ = self.hash_probe(equip_id, *eq_state)
+        q_rows, q_found, _ = self.hash_probe(prod_id, *q_state)
+        for hop in range(1, join_depth):
+            hop_key = (equip_id + hop) % max(len(eq_state[0]) // 4, 1)
+            self.hash_probe(hop_key, *eq_state)   # cost knob; numeric no-op
+        found = eq_found & q_found
+        facts = _kpi_facts_np(prod, eq_rows, q_rows, found)
+        return facts, found
+
+    def segment_reduce(self, facts, n_units):
+        facts = np.asarray(facts, np.float32)
+        agg = np.zeros((n_units, KPI_LANES), np.float32)
+        if not len(facts):
+            return agg
+        unit = facts[:, 0].astype(np.int64)
+        # drop invalid facts AND out-of-range units, matching the jax/pallas
+        # behavior (segment_sum / one-hot ignore ids outside [0, n_units))
+        keep = (facts[:, 9] > 0.5) & (unit >= 0) & (unit < n_units)
+        kpis = np.concatenate(
+            [facts[keep, 3:7],
+             np.ones((int(keep.sum()), 1), np.float32)], axis=-1)
+        np.add.at(agg, unit[keep], kpis)
+        return agg
+
+
+def _kpi_facts_np(prod, eq_rows, q_rows, found) -> np.ndarray:
+    """Host twin of ``transformer.transform_kernel``'s KPI math (same op
+    order in float32, so results agree with XLA to float rounding)."""
+    f = np.float32
+    t_start, t_end = prod[:, 3], prod[:, 4]
+    qty = prod[:, 5]
+    e_start, e_end = eq_rows[:, 3], eq_rows[:, 4]
+    status = eq_rows[:, 5]
+    max_speed = eq_rows[:, 6]
+    planned = eq_rows[:, 7]
+    defects, scrap = q_rows[:, 4], q_rows[:, 6]
+
+    inter_lo = np.maximum(t_start, e_start)
+    inter_hi = np.minimum(t_end, e_end)
+    overlap = np.maximum(inter_hi - inter_lo, f(0.0))
+    duration = np.maximum(t_end - t_start, f(EPS))
+    seg_on = np.where(status > f(0.5), overlap, f(0.0))
+    seg_off = duration - seg_on
+
+    availability = np.clip(seg_on / np.maximum(planned, f(EPS)),
+                           f(0.0), f(1.0))
+    performance = np.clip(qty / np.maximum(max_speed * duration, f(EPS)),
+                          f(0.0), f(1.0))
+    good = np.maximum(qty - defects - scrap, f(0.0))
+    quality = np.clip(good / np.maximum(qty, f(EPS)), f(0.0), f(1.0))
+    oee = availability * performance * quality
+    return np.stack([
+        prod[:, 1], t_start, t_end, availability, performance, quality, oee,
+        seg_on, seg_off, found.astype(np.float32)], axis=-1).astype(np.float32)
+
+
+# ============================================================= jax backend
+@register_backend("jax")
+class JaxBackend(ComputeBackend):
+    """Jitted jnp path (XLA). The default: one fused dispatch per worker per
+    step, power-of-two bucket padding so steady-state recompiles are zero."""
+
+    device = True
+
+    def hash_probe(self, query_keys, keys_tbl, vals_tbl, txn_tbl):
+        import jax.numpy as jnp
+        from repro.core.cache import lookup_ref
+        vals, found, txn = lookup_ref(
+            jnp.asarray(np.asarray(query_keys), jnp.int32),
+            keys_tbl, vals_tbl, txn_tbl)
+        return np.asarray(vals), np.asarray(found), np.asarray(txn)
+
+    def transform(self, prod, equipment, quality, *, join_depth=1):
+        import jax.numpy as jnp
+        from repro.core.transformer import transform_kernel
+        prod = np.asarray(prod, np.float32)
+        n = len(prod)
+        padded = self._pad_bucket(prod, floor=128)
+        eqk, eqv, eqt = equipment.device_state()
+        qk, qv, qt = quality.device_state()
+        facts, found = transform_kernel(jnp.asarray(padded), eqk, eqv, eqt,
+                                        qk, qv, qt, join_depth=join_depth)
+        return np.asarray(facts)[:n], np.asarray(found)[:n]
+
+    def segment_reduce(self, facts, n_units):
+        import jax.numpy as jnp
+        facts = np.asarray(facts, np.float32)
+        if not len(facts):
+            return np.zeros((n_units, KPI_LANES), np.float32)
+        padded = self._pad_bucket(facts, floor=128)  # pads are valid=0 rows
+        return np.asarray(_rollup_jnp(jnp.asarray(padded), n_units))
+
+
+_ROLLUP_JIT = None
+
+
+def _rollup_jnp(facts, n_units: int):
+    global _ROLLUP_JIT
+    if _ROLLUP_JIT is None:
+        import functools
+
+        import jax
+        import jax.numpy as jnp
+
+        @functools.partial(jax.jit, static_argnames=("n_units",))
+        def rollup(facts, n_units):
+            unit = facts[:, 0].astype(jnp.int32)
+            valid = facts[:, 9] > 0.5
+            kpis = jnp.concatenate(
+                [facts[:, 3:7], jnp.ones((facts.shape[0], 1), jnp.float32)],
+                axis=-1)
+            kpis = jnp.where(valid[:, None], kpis, 0.0)
+            # invalid rows route to a trash segment past n_units
+            return jax.ops.segment_sum(kpis, jnp.where(valid, unit, n_units),
+                                       num_segments=n_units + 1)[:n_units]
+
+        _ROLLUP_JIT = rollup
+    return _ROLLUP_JIT(facts, n_units)
+
+
+# ========================================================== pallas backend
+@register_backend("pallas")
+class PallasBackend(ComputeBackend):
+    """TPU Pallas kernels (``hash_join`` one-hot-MXU probe, ``segment_kpi``
+    fused KPI + rollup). On CPU hosts the kernels run in interpret mode —
+    slow but contract-identical, so parity tests cover the kernel path."""
+
+    device = True
+
+    def hash_probe(self, query_keys, keys_tbl, vals_tbl, txn_tbl):
+        import jax.numpy as jnp
+        from repro.kernels.hash_join.ops import hash_join
+        vals, found, txn = hash_join(
+            jnp.asarray(np.asarray(query_keys), jnp.int32),
+            keys_tbl, vals_tbl, txn_tbl)
+        return np.asarray(vals), np.asarray(found), np.asarray(txn)
+
+    def transform(self, prod, equipment, quality, *, join_depth=1):
+        import jax.numpy as jnp
+        from repro.kernels.hash_join.ops import hash_join
+        from repro.kernels.segment_kpi.ops import segment_kpi
+        prod = np.asarray(prod, np.float32)
+        n = len(prod)
+        padded = jnp.asarray(self._pad_bucket(prod, floor=256))
+        eqk, eqv, eqt = equipment.device_state()
+        qk, qv, qt = quality.device_state()
+        equip_id = padded[:, 1].astype(jnp.int32)
+        prod_id = padded[:, 0].astype(jnp.int32)
+        eq_rows, eq_found, _ = hash_join(equip_id, eqk, eqv, eqt)
+        q_rows, q_found, _ = hash_join(prod_id, qk, qv, qt)
+        for hop in range(1, join_depth):
+            hop_key = (equip_id + jnp.int32(hop)) % jnp.int32(
+                max(eqk.shape[0] // 4, 1))
+            hash_join(hop_key, eqk, eqv, eqt)  # cost knob; numeric no-op
+        found = eq_found & q_found
+        # the kernel derives its valid flag from the joined rows' key lane:
+        # mark misses so facts[:, -1] equals the probe's found mask
+        eq_rows = eq_rows.at[:, 1].set(
+            jnp.where(eq_found, eq_rows[:, 1], -1.0))
+        q_rows = q_rows.at[:, 1].set(
+            jnp.where(q_found, q_rows[:, 1], -1.0))
+        # the fused kernel always emits an aggregate; transform only needs
+        # the facts (rollup is its own op), so keep that epilogue minimal
+        facts, _ = segment_kpi(padded, eq_rows, q_rows, n_units=1)
+        return np.asarray(facts)[:n], np.asarray(found)[:n]
+
+    def segment_reduce(self, facts, n_units):
+        import jax.numpy as jnp
+        from repro.kernels.segment_kpi.ops import segment_rollup
+        facts = np.asarray(facts, np.float32)
+        if not len(facts):
+            return np.zeros((n_units, KPI_LANES), np.float32)
+        padded = self._pad_bucket(facts, floor=256)
+        padded[len(facts):, 9] = 0.0           # pad rows marked invalid
+        return np.asarray(segment_rollup(jnp.asarray(padded),
+                                         n_units=n_units))
+
+
+__all__ = [
+    "ComputeBackend", "NumpyBackend", "JaxBackend", "PallasBackend",
+    "register_backend", "get_backend", "available_backends",
+    "resolve_backend_name", "DEFAULT_BACKEND", "ENV_VAR", "KPI_LANES",
+]

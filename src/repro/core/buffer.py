@@ -57,6 +57,13 @@ class OperationalMessageBuffer:
         self.total_retried += len(ready)
         return ready
 
+    def drain(self) -> RecordBatch:
+        """Remove and return ALL buffered records (failover handoff: a dead
+        worker's replicated buffer is adopted by a survivor)."""
+        out = self._batch
+        self._batch = RecordBatch.empty()
+        return out
+
     # ---------------------------------------------------------- durability
     def export_state(self) -> dict:
         return {"batch": self._batch.as_dict(), "dropped": self.dropped}

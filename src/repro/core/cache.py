@@ -9,9 +9,11 @@ a device-resident open-addressing hash table:
   txn    : i64 [n_slots]                  — row transaction time (watermark)
 
 Slot assignment happens host-side at update time (updates are rare next to
-lookups); the hot path — ``lookup`` inside the jitted Data Transformer — is
-pure JAX linear probing, contract-identical to the Pallas ``hash_join``
-kernel that replaces it on TPU.
+lookups); the hot path — the probe inside the Data Transformer — goes
+through the pluggable compute-backend layer (``repro.core.backend``):
+``numpy`` host probing, ``jax`` jitted linear probing (``lookup_ref``
+below), or the Pallas ``hash_join`` kernel on TPU. All three are
+contract-identical.
 
 Fault tolerance / elasticity (paper §3.2): ``reset_from_snapshot`` re-dumps
 the compacted master topic filtered by the newly assigned business keys —
@@ -56,10 +58,10 @@ def hash32_jnp(keys: jax.Array) -> jax.Array:
 
 class InMemoryTable:
     def __init__(self, n_slots: int, width: int = PAYLOAD_WIDTH,
-                 use_kernel: bool = False):
+                 backend=None):
         self.n_slots = n_slots
         self.width = width
-        self.use_kernel = use_kernel
+        self._backend = backend          # name/instance; resolved lazily
         self.keys = np.full(n_slots, -1, np.int32)
         self.values = np.zeros((n_slots, width), np.float32)
         self.txn = np.zeros(n_slots, np.int64)
@@ -142,15 +144,22 @@ class InMemoryTable:
                             jnp.asarray(self.txn))
         return self._device
 
-    def lookup(self, query_keys: jax.Array
-               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-        """Vectorized probe. Returns (values [n, W], found [n] bool,
-        txn_times [n])."""
-        keys_tbl, vals_tbl, txn_tbl = self.device_state()
-        if self.use_kernel:
-            from repro.kernels.hash_join.ops import hash_join
-            return hash_join(query_keys, keys_tbl, vals_tbl, txn_tbl)
-        return lookup_ref(query_keys, keys_tbl, vals_tbl, txn_tbl)
+    @property
+    def backend(self):
+        """Resolved ComputeBackend (explicit > config/env default)."""
+        from repro.core.backend import ComputeBackend, get_backend
+        if not isinstance(self._backend, ComputeBackend):
+            self._backend = get_backend(self._backend)
+        return self._backend
+
+    def lookup(self, query_keys
+               ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Vectorized probe through the compute backend. Returns host
+        (values [n, W], found [n] bool, txn_times [n])."""
+        be = self.backend
+        state = (self.device_state() if be.device
+                 else (self.keys, self.values, self.txn))
+        return be.hash_probe(query_keys, *state)
 
 
 @jax.jit

@@ -12,12 +12,14 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.core.partitioning import partition_bounds
 from repro.core.transformer import FACT_COLUMNS
 
 
 class StarSchemaWarehouse:
-    def __init__(self):
+    def __init__(self, backend=None):
         self._parts: Dict[int, List[np.ndarray]] = {}
+        self.backend = backend       # pipeline's ComputeBackend (or None)
         self.rows_loaded = 0
         self.load_calls = 0
 
@@ -27,6 +29,31 @@ class StarSchemaWarehouse:
         self._parts.setdefault(partition, []).append(np.asarray(facts))
         self.rows_loaded += len(facts)
         self.load_calls += 1
+
+    def load_partitioned(self, facts: np.ndarray, n_partitions: int) -> int:
+        """Split a coalesced fact block back per business-key partition
+        (fact col 0 IS the business key) and append each slice — the ONLY
+        point where the single-dispatch micro-batch re-partitions."""
+        n = len(facts)
+        if n == 0:
+            return 0
+        order, bounds = partition_bounds(facts[:, 0].astype(np.int64),
+                                         n_partitions)
+        sorted_facts = facts[order]
+        for p in range(n_partitions):
+            lo, hi = bounds[p], bounds[p + 1]
+            if hi > lo:
+                self.load(p, sorted_facts[lo:hi])
+        return n
+
+    def kpi_rollup(self, n_units: int, backend=None) -> np.ndarray:
+        """Per-equipment KPI sums [n_units, 5] (availability, performance,
+        quality, oee, count) via the compute backend's segmented reduce.
+        Selection: explicit arg > the pipeline's configured backend >
+        env/default."""
+        from repro.core.backend import get_backend
+        be = get_backend(backend or self.backend)
+        return be.segment_reduce(self.fact_table(), n_units)
 
     def fact_table(self) -> np.ndarray:
         chunks = [c for parts in self._parts.values() for c in parts]

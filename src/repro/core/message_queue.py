@@ -71,45 +71,74 @@ class Topic:
         self.partitions = [Partition() for _ in range(cfg.n_partitions)]
         # compaction index: row_key -> (txn_time, payload, business_key)
         self._compact: Dict[int, Tuple[int, np.ndarray, int]] = {}
+        self._compact_view = None    # lazily materialized columnar snapshot
 
     def publish(self, batch: RecordBatch) -> None:
         if not len(batch):
             return
-        keys = (batch.row_key if self.cfg.partition_by == "row_key"
-                else batch.business_key)
-        parts = partition_of(keys, self.cfg.n_partitions)
-        for p in range(self.cfg.n_partitions):
-            idx = np.nonzero(parts == p)[0]
-            if len(idx):
-                self.partitions[p].append(batch.take(idx))
+        key = ("row_key" if self.cfg.partition_by == "row_key"
+               else "business_key")
+        for p, part_batch in batch.split_by_partition(
+                self.cfg.n_partitions, key=key):
+            self.partitions[p].append(part_batch)
         if self.cfg.compacted:
-            for i in range(len(batch)):
+            # within-batch winner per row key first (latest txn_time, arrival
+            # order breaking ties — same rule as the per-record loop), then
+            # one dict update per surviving key
+            order = np.lexsort((np.arange(len(batch)), batch.txn_time,
+                                batch.row_key))
+            rks = batch.row_key[order]
+            last = np.nonzero(np.append(rks[1:] != rks[:-1], True))[0]
+            for i in order[last]:
+                i = int(i)
                 rk = int(batch.row_key[i])
                 t = int(batch.txn_time[i])
                 prev = self._compact.get(rk)
                 if prev is None or t >= prev[0]:
                     self._compact[rk] = (t, batch.payload[i],
                                          int(batch.business_key[i]))
+            self._compact_view = None
 
-    def snapshot(self, business_keys: Optional[set] = None
+    def _compact_columns(self):
+        """Columnar view of the compaction index (cached between publishes)
+        as (row_keys, payloads, txn_times, business_keys)."""
+        if self._compact_view is None:
+            from repro.core.records import PAYLOAD_WIDTH
+            if not self._compact:
+                self._compact_view = (
+                    np.zeros(0, np.int64),
+                    np.zeros((0, PAYLOAD_WIDTH), np.float32),
+                    np.zeros(0, np.int64), np.zeros(0, np.int64))
+            else:
+                vals = list(self._compact.values())
+                self._compact_view = (
+                    np.fromiter(self._compact.keys(), np.int64,
+                                len(self._compact)),
+                    np.stack([v[1] for v in vals]),
+                    np.array([v[0] for v in vals], np.int64),
+                    np.array([v[2] for v in vals], np.int64))
+            for a in self._compact_view:
+                a.flags.writeable = False   # callers get views, not copies
+        return self._compact_view
+
+    def snapshot(self, business_keys=None
                  ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Compacted latest-per-row-key view, optionally filtered by the
         business keys assigned to the requesting worker (paper: the cache
         'only saves data related to the business keys assigned to its
-        corresponding Stream Processor node'). Returns (row_keys, payloads,
+        corresponding Stream Processor node'). ``business_keys`` may be a
+        set or a (sorted) integer array. Returns (row_keys, payloads,
         txn_times)."""
         assert self.cfg.compacted, "snapshot() requires a compacted topic"
-        items = [(rk, v) for rk, v in self._compact.items()
-                 if business_keys is None or v[2] in business_keys]
-        if not items:
-            from repro.core.records import PAYLOAD_WIDTH
-            return (np.zeros(0, np.int64),
-                    np.zeros((0, PAYLOAD_WIDTH), np.float32),
-                    np.zeros(0, np.int64))
-        rks = np.array([rk for rk, _ in items], np.int64)
-        pls = np.stack([v[1] for _, v in items])
-        tts = np.array([v[0] for _, v in items], np.int64)
-        return rks, pls, tts
+        rks, pls, tts, bks = self._compact_columns()
+        if business_keys is None or not len(rks):
+            return rks, pls, tts
+        from repro.core.partitioning import isin_sorted
+        sel = np.unique(np.fromiter(business_keys, np.int64)
+                        if not isinstance(business_keys, np.ndarray)
+                        else business_keys)
+        mask = isin_sorted(sel, bks)
+        return rks[mask], pls[mask], tts[mask]
 
     def high_watermark(self, partition: int) -> int:
         return self.partitions[partition].length
@@ -135,6 +164,26 @@ class MessageQueue:
         off = self.offsets.get(key, 0)
         batch = self.topics[topic].partitions[partition].read(off, max_records)
         return batch
+
+    def consume_many(self, group: str, topic: str, partitions,
+                     max_records_per_partition: Optional[int] = None
+                     ) -> Tuple[RecordBatch, Dict[int, int]]:
+        """Coalesce reads across ``partitions`` into ONE columnar batch —
+        the Stream Processor's single-dispatch micro-batch. Returns
+        (batch, {partition: records_read}); offsets still advance per
+        partition via ``commit`` so rebalance handoff stays exact."""
+        out: List[RecordBatch] = []
+        counts: Dict[int, int] = {}
+        t = self.topics[topic]
+        for p in partitions:
+            off = self.offsets.get((group, topic, p), 0)
+            if off >= t.partitions[p].length:     # drained: skip the read
+                continue
+            b = t.partitions[p].read(off, max_records_per_partition)
+            if len(b):
+                out.append(b)
+                counts[p] = len(b)
+        return RecordBatch.concat(out), counts
 
     def commit(self, group: str, topic: str, partition: int, n: int) -> None:
         key = (group, topic, partition)

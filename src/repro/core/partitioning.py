@@ -36,6 +36,27 @@ def split_by_partition(keys: np.ndarray, n_partitions: int
     return [np.nonzero(part == p)[0] for p in range(n_partitions)]
 
 
+def isin_sorted(sorted_keys: np.ndarray, values: np.ndarray) -> np.ndarray:
+    """Vectorized membership of ``values`` in a SORTED unique key array via
+    binary search (the shared idiom behind worker business-key filtering and
+    compacted-snapshot filtering). Returns a bool mask over ``values``."""
+    if not len(sorted_keys):
+        return np.zeros(len(values), bool)
+    idx = np.minimum(np.searchsorted(sorted_keys, values),
+                     len(sorted_keys) - 1)
+    return sorted_keys[idx] == values
+
+
+def partition_bounds(keys: np.ndarray, n_partitions: int):
+    """Stable single-gather bucketing by partition. Returns (order, bounds):
+    rows of partition p are ``order[bounds[p]:bounds[p+1]]`` — the one
+    algorithm behind both queue publish and warehouse load splitting."""
+    parts = partition_of(keys, n_partitions)
+    order = np.argsort(parts, kind="stable")
+    bounds = np.searchsorted(parts[order], np.arange(n_partitions + 1))
+    return order, bounds
+
+
 class PartitionAssignment:
     """business-key partitions -> worker assignment with rebalancing
     (paper §3.2: on failure/scale events the coordinator reassigns and the

@@ -10,18 +10,20 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional, Set
+from typing import Dict, List, Optional
 
 import numpy as np
 
 from repro.configs.dod_etl import ETLConfig
+from repro.core.backend import get_backend
 from repro.core.buffer import OperationalMessageBuffer
 from repro.core.cache import InMemoryTable
 from repro.core.cdc import SourceDatabase
 from repro.core.listener import ChangeTracker
 from repro.core.message_queue import MessageQueue
 from repro.core.loader import StarSchemaWarehouse
-from repro.core.partitioning import PartitionAssignment, partition_of
+from repro.core.partitioning import (PartitionAssignment, isin_sorted,
+                                     partition_of)
 from repro.core.records import RecordBatch
 from repro.core.transformer import DataTransformer
 
@@ -38,29 +40,66 @@ class StageMetrics:
 
 class StreamProcessorWorker:
     """One Stream Processor node: assigned business-key partitions, local
-    in-memory caches (filtered by assigned keys), transformer + loader."""
+    in-memory caches (filtered by assigned keys), transformer + loader.
+
+    Hot path is COALESCED: every step consumes all assigned partitions into
+    one columnar batch and issues ONE device dispatch through the compute
+    backend; facts split back per partition only at ``warehouse.load`` time.
+    """
 
     def __init__(self, name: str, cfg: ETLConfig, queue: MessageQueue,
-                 warehouse: StarSchemaWarehouse, join_depth: int = 1):
+                 warehouse: StarSchemaWarehouse, join_depth: int = 1,
+                 backend=None):
         self.name = name
         self.cfg = cfg
         self.queue = queue
         self.warehouse = warehouse
-        self.partitions: List[int] = []
-        self.equipment = InMemoryTable(cfg.cache_slots, cfg.cache_row_width)
-        self.quality = InMemoryTable(cfg.cache_slots, cfg.cache_row_width)
+        self.backend = get_backend(backend or cfg.backend or None)
+        self._partitions: List[int] = []
+        self._bkeys_memo: Dict[int, np.ndarray] = {}
+        self.equipment = InMemoryTable(cfg.cache_slots, cfg.cache_row_width,
+                                       backend=self.backend)
+        self.quality = InMemoryTable(cfg.cache_slots, cfg.cache_row_width,
+                                     backend=self.backend)
         self.buffer = OperationalMessageBuffer(cfg.buffer_capacity)
         self.transformer = DataTransformer(self.equipment, self.quality,
-                                           self.buffer, join_depth)
+                                           self.buffer, join_depth,
+                                           backend=self.backend)
         self.metrics = StageMetrics()
         self.group = f"sp.{name}"
 
     # ----------------------------------------------------------- cache mgmt
-    def assigned_business_keys(self, n_business_keys: int) -> Set[int]:
-        keys = np.arange(n_business_keys, dtype=np.int64)
-        parts = partition_of(keys, self.cfg.n_partitions)
-        mine = {int(k) for k, p in zip(keys, parts) if p in set(self.partitions)}
-        return mine
+    @property
+    def partitions(self) -> tuple:
+        # a copy: in-place mutation would bypass the setter and leave the
+        # business-key memo stale
+        return tuple(self._partitions)
+
+    @partitions.setter
+    def partitions(self, value) -> None:
+        self._partitions = list(value)
+        self._bkeys_memo.clear()     # reassignment invalidates the key memo
+
+    def assigned_business_keys(self, n_business_keys: int) -> np.ndarray:
+        """Sorted i64 array of this worker's business keys, memoized until
+        the partition assignment changes (no per-pump set rebuilds)."""
+        memo = self._bkeys_memo.get(n_business_keys)
+        if memo is None:
+            keys = np.arange(n_business_keys, dtype=np.int64)
+            parts = partition_of(keys, self.cfg.n_partitions)
+            mask = np.isin(parts, np.asarray(self._partitions, np.int32))
+            memo = keys[mask]        # arange slice => already sorted
+            self._bkeys_memo[n_business_keys] = memo
+        return memo
+
+    def _filter_assigned(self, batch: RecordBatch) -> RecordBatch:
+        """Vectorized business-key membership via binary search against the
+        memoized sorted key array (replaces per-pump ``np.isin`` on a
+        freshly rebuilt Python set)."""
+        bkeys = self.assigned_business_keys(self.cfg.n_business_keys)
+        if not len(bkeys):
+            return RecordBatch.empty()
+        return batch.filter(isin_sorted(bkeys, batch.business_key))
 
     def reset_caches(self, master_topics: Dict[str, str],
                      n_business_keys: int) -> float:
@@ -87,28 +126,24 @@ class StreamProcessorWorker:
     # ----------------------------------------------------- master ingestion
     def pump_master(self, topic: str, cache: InMemoryTable,
                     max_records: Optional[int] = None) -> int:
-        """In-memory Table Updater: consume master topic partitions, filter
-        by assigned business keys, upsert into the local cache."""
-        n = 0
-        bkeys = None
-        for p in self.partitions_for_master(topic):
-            batch = self.queue.consume(self.group, topic, p, max_records)
-            if not len(batch):
-                continue
-            self.queue.commit(self.group, topic, p, len(batch))
-            if bkeys is None:
-                bkeys = self.assigned_business_keys(self.cfg.n_business_keys)
-            mask = np.isin(batch.business_key, list(bkeys))
-            mine = batch.filter(mask)
-            if not len(mine):
-                continue
-            if cache is self.quality:
-                join_keys = mine.payload[:, 3].astype(np.int64)
-            else:
-                join_keys = mine.payload[:, 1].astype(np.int64)
-            cache.upsert(join_keys, mine.payload, mine.txn_time)
-            n += len(mine)
-        return n
+        """In-memory Table Updater: consume ALL master partitions as one
+        coalesced batch, filter by assigned business keys (vectorized),
+        upsert into the local cache in one pass."""
+        batch, counts = self.queue.consume_many(
+            self.group, topic, self.partitions_for_master(topic), max_records)
+        for p, c in counts.items():
+            self.queue.commit(self.group, topic, p, c)
+        if not len(batch):
+            return 0
+        mine = self._filter_assigned(batch)
+        if not len(mine):
+            return 0
+        if cache is self.quality:
+            join_keys = mine.payload[:, 3].astype(np.int64)
+        else:
+            join_keys = mine.payload[:, 1].astype(np.int64)
+        cache.upsert(join_keys, mine.payload, mine.txn_time)
+        return len(mine)
 
     def partitions_for_master(self, topic: str) -> List[int]:
         # master topics are row-key partitioned: a worker's business keys can
@@ -119,15 +154,17 @@ class StreamProcessorWorker:
     # ------------------------------------------------------------ transform
     def process_operational(self, topic: str, max_records: Optional[int] = None
                             ) -> int:
+        """One micro-batch step over this worker's partitions: coalesced
+        consume -> ONE backend dispatch -> split facts per partition at
+        load time. ``max_records`` still bounds each partition's read so
+        offset/rebalance semantics are unchanged."""
         t0 = time.perf_counter()
-        done = 0
-        for p in self.partitions:
-            batch = self.queue.consume(self.group, topic, p, max_records)
-            if len(batch):
-                self.queue.commit(self.group, topic, p, len(batch))
-            facts, _ = self.transformer.process(batch)
-            self.warehouse.load(p, facts)
-            done += len(facts)
+        batch, counts = self.queue.consume_many(
+            self.group, topic, self.partitions, max_records)
+        for p, c in counts.items():
+            self.queue.commit(self.group, topic, p, c)
+        facts, _ = self.transformer.process(batch)
+        done = self.warehouse.load_partitioned(facts, self.cfg.n_partitions)
         self.metrics.records += done
         self.metrics.wall_s += time.perf_counter() - t0
         return done
@@ -138,15 +175,16 @@ class DODETLPipeline:
     ``repro.runtime`` schedules the same workers with failures/elasticity)."""
 
     def __init__(self, cfg: ETLConfig, source: SourceDatabase,
-                 n_workers: int = 1, join_depth: int = 1):
+                 n_workers: int = 1, join_depth: int = 1, backend=None):
         self.cfg = cfg
         self.source = source
+        self.backend = get_backend(backend or cfg.backend or None)
         self.queue = MessageQueue()
         self.tracker = ChangeTracker(cfg, source.log, self.queue)
-        self.warehouse = StarSchemaWarehouse()
+        self.warehouse = StarSchemaWarehouse(backend=self.backend)
         self.workers = [
             StreamProcessorWorker(f"w{i}", cfg, self.queue, self.warehouse,
-                                  join_depth)
+                                  join_depth, backend=self.backend)
             for i in range(n_workers)]
         self.assignment = PartitionAssignment(
             cfg.n_partitions, [w.name for w in self.workers])
@@ -249,8 +287,7 @@ class DODETLPipeline:
             raise RuntimeError("all workers failed")
         redump = self._rebalance_and_transfer(prior)
         for d in dead:
-            if len(d.buffer):
-                self.workers[0].buffer.push(d.buffer._batch)
+            self.workers[0].buffer.push(d.buffer.drain())
         return redump
 
     def add_workers(self, n: int, join_depth: int = 1) -> float:
@@ -261,7 +298,7 @@ class DODETLPipeline:
         for i in range(n):
             self.workers.append(StreamProcessorWorker(
                 f"w{start + i}", self.cfg, self.queue, self.warehouse,
-                join_depth))
+                join_depth, backend=self.backend))
         return self._rebalance_and_transfer(prior)
 
     def checkpoint(self) -> Dict:

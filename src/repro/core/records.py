@@ -8,7 +8,7 @@ every stage jit-compatible.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -64,6 +64,21 @@ class RecordBatch:
 
     def sort_by_lsn(self) -> "RecordBatch":
         return self.take(np.argsort(self.lsn, kind="stable"))
+
+    def split_by_partition(self, n_partitions: int,
+                           key: str = "business_key"
+                           ) -> List[Tuple[int, "RecordBatch"]]:
+        """Bucket rows by hash partition with ONE stable gather; the
+        per-partition batches are zero-copy slices of the reordered columns.
+        Returns [(partition, batch)] for non-empty partitions only."""
+        from repro.core.partitioning import partition_bounds
+        if not len(self):
+            return []
+        order, bounds = partition_bounds(getattr(self, key), n_partitions)
+        cols = [getattr(self, f.name)[order]
+                for f in dataclasses.fields(RecordBatch)]
+        return [(p, RecordBatch(*(c[bounds[p]:bounds[p + 1]] for c in cols)))
+                for p in range(n_partitions) if bounds[p + 1] > bounds[p]]
 
     def as_dict(self) -> Dict[str, np.ndarray]:
         return {f.name: getattr(self, f.name)

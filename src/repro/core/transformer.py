@@ -3,9 +3,10 @@ operational records against the In-memory cache, fact-grain splitting
 (Fig. 3: intersect production windows with equipment-status intervals) and
 OEE KPI computation (§4: availability / performance / quality / OEE).
 
-The numeric core is one jitted function over fixed-width arrays; on TPU the
-join probes and the segmented KPI reduction are the ``hash_join`` and
-``segment_kpi`` Pallas kernels.
+The numeric core is ONE fused dispatch over fixed-width arrays, routed
+through the pluggable compute-backend layer (``repro.core.backend``):
+``numpy`` reference, ``jax`` jitted (``transform_kernel`` below), or the
+``hash_join`` + ``segment_kpi`` Pallas kernels on TPU.
 
 Payload layouts (see configs.dod_etl.steelworks_config):
   production : (prod_id, equipment_id, txn_time, t_start, t_end, qty, speed, order_id)
@@ -89,16 +90,22 @@ def q_vals_cols(q_rows: jax.Array) -> Tuple[jax.Array, jax.Array]:
 
 
 class DataTransformer:
-    """Stateful wrapper: caches + late buffer + metrics for one worker."""
+    """Stateful wrapper: caches + late buffer + metrics for one worker.
+    The numeric core is delegated to the selected ``ComputeBackend`` —
+    one fused transform dispatch per call, regardless of how many queue
+    partitions were coalesced into the batch."""
 
     def __init__(self, equipment: InMemoryTable, quality: InMemoryTable,
-                 buffer, join_depth: int = 1):
+                 buffer, join_depth: int = 1, backend=None):
+        from repro.core.backend import get_backend
         self.equipment = equipment
         self.quality = quality
         self.buffer = buffer
         self.join_depth = join_depth
+        self.backend = get_backend(backend)
         self.records_out = 0
         self.records_late = 0
+        self.dispatches = 0     # device dispatch count (the tentpole metric)
 
     def watermark(self) -> int:
         return min(self.equipment.watermark, self.quality.watermark)
@@ -109,8 +116,8 @@ class DataTransformer:
         the Operational Message Buffer; buffered records whose txn_time
         passed the cache watermark are retried first (paper §3.1.2).
 
-        Batches are padded to power-of-two buckets so the jitted kernel
-        compiles once per bucket, not once per arrival size (a 100x
+        Backends pad to power-of-two buckets internally so jitted kernels
+        compile once per bucket, not once per arrival size (a 100x
         throughput cliff otherwise)."""
         from repro.core.records import RecordBatch
 
@@ -120,21 +127,13 @@ class DataTransformer:
         if not n:
             return np.zeros((0, len(FACT_COLUMNS)), np.float32), 0
 
-        bucket = 1 << (n - 1).bit_length()
-        payload = batch.payload
-        if bucket != n:
-            padrow = np.full((bucket - n, payload.shape[1]), -1.0, np.float32)
-            payload = np.concatenate([payload, padrow])
-
-        eqk, eqv, eqt = self.equipment.device_state()
-        qk, qv, qt = self.quality.device_state()
-        facts, found = transform_kernel(
-            jnp.asarray(payload), eqk, eqv, eqt, qk, qv, qt,
+        facts, found = self.backend.transform(
+            batch.payload, self.equipment, self.quality,
             join_depth=self.join_depth)
-        found_np = np.asarray(found)[:n]
-        late = batch.filter(~found_np)
+        self.dispatches += 1
+        late = batch.filter(~found)
         self.buffer.push(late)
         self.records_late += len(late)
-        good_facts = np.asarray(facts)[:n][found_np]
+        good_facts = facts[found]
         self.records_out += len(good_facts)
         return good_facts, len(late)

@@ -1,4 +1,5 @@
-"""Public wrapper used by repro.core.cache when ``use_kernel=True``."""
+"""Public wrapper used by the ``pallas`` compute backend
+(repro.core.backend.PallasBackend)."""
 from __future__ import annotations
 
 import jax

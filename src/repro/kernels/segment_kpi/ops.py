@@ -4,7 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.segment_kpi.segment_kpi import segment_kpi_kernel
+from repro.kernels.segment_kpi.segment_kpi import (segment_kpi_kernel,
+                                                   segment_rollup_kernel)
 
 
 def segment_kpi(prod, eq_rows, q_rows, *, n_units: int = 32,
@@ -22,4 +23,18 @@ def segment_kpi(prod, eq_rows, q_rows, *, n_units: int = 32,
     return facts[:n], agg.sum(axis=0)
 
 
-__all__ = ["segment_kpi", "segment_kpi_kernel"]
+def segment_rollup(facts, *, n_units: int = 32, block: int = 256):
+    """Per-unit KPI rollup of fact rows [N, 10]; pads with invalid rows."""
+    n = facts.shape[0]
+    pad = (-n) % block
+    if pad:
+        facts = jnp.concatenate(
+            [facts, jnp.zeros((pad, facts.shape[1]), jnp.float32)])
+    on_tpu = jax.default_backend() == "tpu"
+    agg = segment_rollup_kernel(facts, n_units=n_units, block=block,
+                                interpret=not on_tpu)
+    return agg.sum(axis=0)
+
+
+__all__ = ["segment_kpi", "segment_kpi_kernel", "segment_rollup",
+           "segment_rollup_kernel"]

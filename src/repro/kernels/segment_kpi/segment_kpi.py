@@ -64,6 +64,40 @@ def _kpi_kernel(prod_ref, eq_ref, q_ref, facts_ref, agg_ref, *,
         preferred_element_type=jnp.float32)              # [n_units, 5]
 
 
+def _rollup_kernel(facts_ref, agg_ref, *, n_units: int, block: int):
+    facts = facts_ref[...]                                # [B, N_FACT]
+    unit = facts[:, 0].astype(jnp.int32)
+    valid = facts[:, 9] > 0.5
+    iota = jax.lax.broadcasted_iota(jnp.int32, (block, n_units), 1)
+    onehot = ((iota == unit[:, None]) & valid[:, None]).astype(jnp.float32)
+    kpis = jnp.concatenate(
+        [facts[:, 3:7], jnp.ones((block, 1), jnp.float32)], axis=-1)
+    agg_ref[0] = jax.lax.dot_general(
+        onehot, kpis, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)               # [n_units, 5]
+
+
+@functools.partial(jax.jit, static_argnames=("n_units", "block", "interpret"))
+def segment_rollup_kernel(facts: jax.Array, *, n_units: int = 32,
+                          block: int = 256, interpret: bool = True):
+    """Standalone per-unit KPI rollup over already-built fact rows
+    [N, N_FACT] f32 (col 0 = unit, col 9 = valid flag): one-hot matmul on
+    the MXU, same discipline as the fused ``segment_kpi_kernel`` epilogue.
+    Returns agg [blocks, n_units, 5] — caller sums over blocks."""
+    n = facts.shape[0]
+    assert n % block == 0
+    nb = n // block
+    kernel = functools.partial(_rollup_kernel, n_units=n_units, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block, N_FACT), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, n_units, 5), lambda i: (i, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, n_units, 5), jnp.float32)],
+        interpret=interpret,
+    )(facts)[0]
+
+
 @functools.partial(jax.jit, static_argnames=("n_units", "block", "interpret"))
 def segment_kpi_kernel(prod: jax.Array, eq_rows: jax.Array,
                        q_rows: jax.Array, *, n_units: int = 32,

@@ -296,9 +296,13 @@ _DOT_LINE_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%[\w.\-]+\s*=\s*([a-z]\w*)\[([\d,]*)\][^=]*?dot\("
     r"%([\w.\-]+),\s*%([\w.\-]+)\),\s*lhs_batch_dims=\{([\d,]*)\}.*?"
     r"lhs_contracting_dims=\{([\d,]*)\}", )
+# operands may carry inline types ("dot(f32[64,128]{1,0} %a, ...)" in
+# newer HLO dumps) or be bare ("dot(%a, ...)")
+_TYPED_OPND = r"(?:[a-z]\w*\[[\d,]*\](?:\{[\d,]*\})?\s+)?"
 _DOT_SIMPLE_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%[\w.\-]+\s*=\s*([a-z]\w*)\[([\d,]*)\]\S*\s+dot\("
-    r"%([\w.\-]+),\s*%([\w.\-]+)\)(.*)$")
+    + _TYPED_OPND + r"%([\w.\-]+),\s*"
+    + _TYPED_OPND + r"%([\w.\-]+)\)(.*)$")
 
 
 def _dot_flops_pass(text: str, comps: Dict[str, _Computation]) -> None:

@@ -1,0 +1,188 @@
+"""Compute-backend layer tests: numpy/jax/pallas parity on every hot op,
+single-dispatch coalescing, and rebalance offset handoff (paper §3.2)."""
+import numpy as np
+import pytest
+
+from repro.configs.dod_etl import steelworks_config
+from repro.core import (DODETLPipeline, MessageQueue, RecordBatch,
+                        SourceDatabase, TopicConfig, get_backend, make_batch)
+from repro.core.backend import available_backends
+from repro.core.cache import InMemoryTable
+from repro.data.sampler import SamplerConfig, SteelworksSampler
+
+BACKENDS = ("numpy", "jax", "pallas")
+
+
+def _pipeline(backend, n_records=300, n_workers=2, n_partitions=4,
+              late_frac=0.1, seed=0):
+    cfg = steelworks_config(n_partitions=n_partitions, backend=backend)
+    src = SourceDatabase()
+    SteelworksSampler(cfg, SamplerConfig(
+        records_per_table=n_records, n_equipment=n_partitions,
+        late_master_frac=late_frac, seed=seed)).generate(src)
+    pipe = DODETLPipeline(cfg, src, n_workers=n_workers)
+    pipe.extract()
+    pipe.bootstrap_caches()
+    return pipe
+
+
+def _sorted_facts(pipe):
+    t = pipe.warehouse.fact_table()
+    return t[np.lexsort((t[:, 1], t[:, 0]))]
+
+
+def test_backends_registered():
+    assert set(BACKENDS) <= set(available_backends())
+    for name in BACKENDS:
+        assert get_backend(name).name == name
+        assert get_backend(name) is get_backend(name)   # singleton
+
+
+def test_backend_selection_config_env_and_default(monkeypatch):
+    monkeypatch.delenv("DODETL_BACKEND", raising=False)
+    assert get_backend(None).name == "jax"
+    monkeypatch.setenv("DODETL_BACKEND", "numpy")
+    assert get_backend(None).name == "numpy"
+    assert get_backend("pallas").name == "pallas"       # explicit wins
+    cfg = steelworks_config(n_partitions=2, backend="numpy")
+    src = SourceDatabase()
+    pipe = DODETLPipeline(cfg, src, n_workers=1)
+    assert pipe.backend.name == "numpy"
+    assert pipe.workers[0].transformer.backend.name == "numpy"
+
+
+def test_hash_probe_parity():
+    rng = np.random.default_rng(3)
+    tbl = InMemoryTable(512)
+    keys = rng.choice(10**6, 200, replace=False).astype(np.int64)
+    payload = rng.normal(size=(200, 8)).astype(np.float32)
+    tbl.upsert(keys, payload, np.arange(200, dtype=np.int64))
+    queries = np.concatenate([keys[:50], keys[:50] + 10**7])  # hits + misses
+    outs = {}
+    for name in BACKENDS:
+        be = get_backend(name)
+        state = (tbl.device_state() if be.device
+                 else (tbl.keys, tbl.values, tbl.txn))
+        outs[name] = be.hash_probe(queries, *state)
+    ref_vals, ref_found, _ = outs["numpy"]
+    assert ref_found[:50].all() and not ref_found[50:].any()
+    for name in ("jax", "pallas"):
+        vals, found, _ = outs[name]
+        np.testing.assert_array_equal(found, ref_found)
+        np.testing.assert_allclose(vals[found], ref_vals[ref_found],
+                                   atol=1e-5)
+
+
+def test_segment_reduce_parity():
+    rng = np.random.default_rng(5)
+    n, n_units = 333, 8
+    facts = np.zeros((n, 10), np.float32)
+    facts[:, 0] = rng.integers(0, n_units, n)
+    facts[:10, 0] = n_units + 3       # out-of-range units: dropped, not a crash
+    facts[:, 3:7] = rng.uniform(0, 1, (n, 4)).astype(np.float32)
+    facts[:, 9] = (rng.random(n) > 0.2).astype(np.float32)
+    ref = get_backend("numpy").segment_reduce(facts, n_units)
+    in_range = facts[:, 0] < n_units
+    assert ref[:, 4].sum() == ((facts[:, 9] > 0.5) & in_range).sum()
+    for name in ("jax", "pallas"):
+        agg = get_backend(name).segment_reduce(facts, n_units)
+        np.testing.assert_allclose(agg, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_backend_parity_end_to_end():
+    """The tentpole guarantee: the SAME seeded workload through every
+    backend produces identical facts (technology-independence, §3.3)."""
+    tables = {}
+    for name in BACKENDS:
+        pipe = _pipeline(name)
+        pipe.run_to_completion()
+        assert pipe.warehouse.rows_loaded == 300
+        assert all(len(w.buffer) == 0 for w in pipe.workers)
+        tables[name] = _sorted_facts(pipe)
+    for name in ("jax", "pallas"):
+        np.testing.assert_allclose(tables[name], tables["numpy"],
+                                   rtol=1e-5, atol=1e-5)
+
+
+def test_consume_many_matches_per_partition_reads():
+    q = MessageQueue()
+    q.create_topic(TopicConfig("t", 0, 4, "business_key"))
+    ids = np.arange(100, dtype=np.int64)
+    q.publish("t", make_batch(0, 0, ids, ids % 7, ids + 100,
+                              np.zeros((100, 8), np.float32)))
+    singles = [q.consume("a", "t", p) for p in range(4)]
+    coalesced, counts = q.consume_many("b", "t", range(4))
+    assert len(coalesced) == sum(len(s) for s in singles) == 100
+    assert counts == {p: len(s) for p, s in enumerate(singles) if len(s)}
+    np.testing.assert_array_equal(
+        np.sort(coalesced.row_key),
+        np.sort(np.concatenate([s.row_key for s in singles])))
+    # committing per partition after a coalesced read drains the topic
+    for p, c in counts.items():
+        q.commit("b", "t", p, c)
+    again, counts2 = q.consume_many("b", "t", range(4))
+    assert len(again) == 0 and counts2 == {}
+
+
+def test_split_by_partition_roundtrip():
+    ids = np.arange(57, dtype=np.int64)
+    batch = make_batch(0, 0, ids, ids % 11, ids, np.zeros((57, 8), np.float32))
+    parts = batch.split_by_partition(4)
+    assert sum(len(b) for _, b in parts) == 57
+    merged = RecordBatch.concat([b for _, b in parts])
+    np.testing.assert_array_equal(np.sort(merged.row_key), ids)
+
+
+def test_buffer_drain():
+    from repro.core import OperationalMessageBuffer
+    buf = OperationalMessageBuffer(64)
+    buf.push(make_batch(0, 0, np.arange(9), np.arange(9), np.arange(9),
+                        np.zeros((9, 8), np.float32)))
+    drained = buf.drain()
+    assert len(drained) == 9 and len(buf) == 0
+    assert len(buf.drain()) == 0
+
+
+def test_rebalance_offset_handoff_loses_nothing():
+    """Committed offsets transfer to the new owners across BOTH a failure
+    and an elastic scale-up; every record lands exactly once."""
+    pipe = _pipeline("jax", n_records=900, n_workers=3, n_partitions=6)
+    pipe.step(max_records_per_partition=40)        # partial progress
+    mid = pipe.warehouse.rows_loaded
+    assert 0 < mid < 900
+    pipe.fail_workers(["w1"])
+    pipe.step(max_records_per_partition=40)
+    pipe.add_workers(2)
+    pipe.run_to_completion()
+    assert pipe.warehouse.rows_loaded == 900       # no loss, no duplicates
+    assert all(len(w.buffer) == 0 for w in pipe.workers)
+    # oracle: unperturbed single-worker run over the same seeded workload
+    oracle = _pipeline("jax", n_records=900, n_workers=1, n_partitions=6)
+    oracle.run_to_completion()
+    np.testing.assert_allclose(_sorted_facts(pipe), _sorted_facts(oracle),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_single_dispatch_per_worker_per_step():
+    """The tentpole refactor's invariant: one transform dispatch per worker
+    per step, no matter how many partitions the worker owns."""
+    pipe = _pipeline("jax", n_records=400, n_workers=2, n_partitions=8)
+    before = {w.name: w.transformer.dispatches for w in pipe.workers}
+    pipe.step(max_records_per_partition=50)
+    for w in pipe.workers:
+        assert len(w.partitions) == 4
+        assert w.transformer.dispatches == before[w.name] + 1
+
+
+def test_kpi_rollup_matches_query_oee():
+    pipe = _pipeline("jax", n_records=400, n_workers=2, n_partitions=4)
+    pipe.run_to_completion()
+    agg = pipe.warehouse.kpi_rollup(4, backend="numpy")
+    for unit in range(4):
+        q = pipe.warehouse.query_oee(unit)
+        if np.isnan(q["oee"]):
+            assert agg[unit, 4] == 0
+            continue
+        assert agg[unit, 4] == q["rows"]
+        np.testing.assert_allclose(agg[unit, 3] / agg[unit, 4], q["oee"],
+                                   rtol=1e-5)

@@ -1,7 +1,8 @@
 """Unit + property tests (hypothesis) for the DOD-ETL substrate."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (InMemoryTable, MessageQueue, OperationalMessageBuffer,
                         PartitionAssignment, RecordBatch, TopicConfig,
