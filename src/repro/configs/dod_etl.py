@@ -33,6 +33,10 @@ class ETLConfig:
     seed: int = 0
     backend: str = ""            # compute backend: "numpy" | "jax" | "pallas"
                                  # ("" = DODETL_BACKEND env var, else "jax")
+    # --- concurrent runtime (repro.runtime.cluster.ConcurrentCluster) ---
+    handoff_depth: int = 4       # bounded hand-off queue slots between the
+                                 # ingest -> transform -> load worker stages
+    idle_backoff_s: float = 0.001  # stage sleep when its input is drained
 
     def table(self, name: str) -> TableConfig:
         for t in self.tables:

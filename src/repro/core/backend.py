@@ -166,9 +166,11 @@ class NumpyBackend(ComputeBackend):
         prod_id = prod[:, 0].astype(np.int64)
         eq_rows, eq_found, _ = self.hash_probe(equip_id, *eq_state)
         q_rows, q_found, _ = self.hash_probe(prod_id, *q_state)
-        for hop in range(1, join_depth):
-            hop_key = (equip_id + hop) % max(len(eq_state[0]) // 4, 1)
-            self.hash_probe(hop_key, *eq_state)   # cost knob; numeric no-op
+        if join_depth > 1:            # flattened hop probe (cost knob;
+            mod = max(len(eq_state[0]) // 4, 1)   # numeric no-op)
+            hop_keys = ((equip_id[None, :]
+                         + np.arange(1, join_depth)[:, None]) % mod)
+            self.hash_probe(hop_keys.reshape(-1), *eq_state)
         found = eq_found & q_found
         facts = _kpi_facts_np(prod, eq_rows, q_rows, found)
         return facts, found
@@ -314,10 +316,12 @@ class PallasBackend(ComputeBackend):
         prod_id = padded[:, 0].astype(jnp.int32)
         eq_rows, eq_found, _ = hash_join(equip_id, eqk, eqv, eqt)
         q_rows, q_found, _ = hash_join(prod_id, qk, qv, qt)
-        for hop in range(1, join_depth):
-            hop_key = (equip_id + jnp.int32(hop)) % jnp.int32(
-                max(eqk.shape[0] // 4, 1))
-            hash_join(hop_key, eqk, eqv, eqt)  # cost knob; numeric no-op
+        if join_depth > 1:            # flattened hop probe (cost knob;
+            mod = jnp.int32(max(eqk.shape[0] // 4, 1))  # numeric no-op)
+            hop_keys = ((equip_id[None, :]
+                         + jnp.arange(1, join_depth,
+                                      dtype=jnp.int32)[:, None]) % mod)
+            hash_join(hop_keys.reshape(-1), eqk, eqv, eqt)
         found = eq_found & q_found
         # the kernel derives its valid flag from the joined rows' key lane:
         # mark misses so facts[:, -1] equals the probe's found mask

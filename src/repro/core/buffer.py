@@ -10,8 +10,10 @@ cache, which avoids reprocessing operational messages that still have no
 master data').
 
 The buffer state lives in the coordinator's replicated store (the paper used
-Zookeeper) so any worker can resume reprocessing after a failure — see
-``runtime.coordinator``.
+Zookeeper) so any worker can resume reprocessing after a failure: on a
+§4.1.3 failover, ``repro.runtime.cluster.ConcurrentCluster`` drains a dead
+worker's buffer into a survivor and re-homes every buffered record to its
+partition's current owner.
 """
 from __future__ import annotations
 
@@ -46,12 +48,19 @@ class OperationalMessageBuffer:
                                            len(merged)))
         self._batch = merged
 
-    def pop_ready(self, watermark: int) -> RecordBatch:
+    def pop_ready(self, watermark: int,
+                  limit: Optional[int] = None) -> RecordBatch:
         """Remove and return records eligible for retry (txn_time <=
-        watermark)."""
+        watermark). ``limit`` bounds one retry sweep (oldest-first), so a
+        mass-late cold start is drained in micro-batches instead of one
+        giant dispatch."""
         if not len(self._batch):
             return RecordBatch.empty()
         ready_mask = self._batch.txn_time <= watermark
+        if limit is not None and ready_mask.sum() > limit:
+            keep_off = np.nonzero(ready_mask)[0][limit:]
+            ready_mask = ready_mask.copy()
+            ready_mask[keep_off] = False
         ready = self._batch.filter(ready_mask)
         self._batch = self._batch.filter(~ready_mask)
         self.total_retried += len(ready)

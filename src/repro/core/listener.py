@@ -42,11 +42,15 @@ class Listener:
         batch, scanned = self.log.read_from(self.offset, limit)
         self.records_scanned += scanned
         if len(batch):
-            self.offset = int(batch.lsn[-1]) + 1
             mine = batch.filter(batch.table_id == self.table_id)
             if len(mine):
                 self.queue.publish(self.topic, mine)
                 self.records_extracted += len(mine)
+            # advance the offset only AFTER publishing: extraction-lag
+            # watchers treat `offset == log head` as "everything scanned is
+            # in the queue", so the reverse order opened a window where a
+            # drain check could declare the stream complete mid-publish
+            self.offset = int(batch.lsn[-1]) + 1
             n = len(mine)
         else:
             n = 0
@@ -75,7 +79,14 @@ class ChangeTracker:
             self.listeners.append(Listener(table, tid, log, queue, topic_name))
 
     def poll_all(self, limit_per_table: Optional[int] = None) -> int:
-        return sum(l.poll(limit_per_table) for l in self.listeners)
+        """One extraction round over every Listener. Master tables are
+        polled FIRST: their records feed the In-memory caches (§3.1.2), so
+        giving them extraction priority warms caches before the operational
+        records that join against them — fewer records take the late-buffer
+        detour on a cold start."""
+        ordered = sorted(self.listeners,
+                         key=lambda l: l.table.nature != "master")
+        return sum(l.poll(limit_per_table) for l in ordered)
 
     def topic_of(self, table_name: str) -> str:
         return f"topic.{table_name}"

@@ -8,6 +8,7 @@ read path used by tests/examples to validate end-to-end correctness.
 """
 from __future__ import annotations
 
+import threading
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -17,8 +18,13 @@ from repro.core.transformer import FACT_COLUMNS
 
 
 class StarSchemaWarehouse:
+    """Loads are thread-safe: the concurrent runtime's load stages append
+    from one thread per worker, so the partition map, row counter and reads
+    are guarded by a single lock (the numpy split work stays outside it)."""
+
     def __init__(self, backend=None):
         self._parts: Dict[int, List[np.ndarray]] = {}
+        self._lock = threading.Lock()
         self.backend = backend       # pipeline's ComputeBackend (or None)
         self.rows_loaded = 0
         self.load_calls = 0
@@ -26,24 +32,34 @@ class StarSchemaWarehouse:
     def load(self, partition: int, facts: np.ndarray) -> None:
         if len(facts) == 0:
             return
-        self._parts.setdefault(partition, []).append(np.asarray(facts))
-        self.rows_loaded += len(facts)
-        self.load_calls += 1
+        facts = np.asarray(facts)
+        with self._lock:
+            self._parts.setdefault(partition, []).append(facts)
+            self.rows_loaded += len(facts)
+            self.load_calls += 1
 
     def load_partitioned(self, facts: np.ndarray, n_partitions: int) -> int:
         """Split a coalesced fact block back per business-key partition
         (fact col 0 IS the business key) and append each slice — the ONLY
-        point where the single-dispatch micro-batch re-partitions."""
+        point where the single-dispatch micro-batch re-partitions. The
+        numpy split happens outside the lock; all partition appends then
+        land under ONE acquisition (concurrent workers' load stages share
+        this lock, so per-partition locking would contend ~n_partitions
+        times per dispatch)."""
         n = len(facts)
         if n == 0:
             return 0
         order, bounds = partition_bounds(facts[:, 0].astype(np.int64),
                                          n_partitions)
         sorted_facts = facts[order]
-        for p in range(n_partitions):
-            lo, hi = bounds[p], bounds[p + 1]
-            if hi > lo:
-                self.load(p, sorted_facts[lo:hi])
+        slices = [(p, sorted_facts[bounds[p]:bounds[p + 1]])
+                  for p in range(n_partitions)
+                  if bounds[p + 1] > bounds[p]]
+        with self._lock:
+            for p, chunk in slices:
+                self._parts.setdefault(p, []).append(chunk)
+                self.rows_loaded += len(chunk)
+                self.load_calls += 1
         return n
 
     def kpi_rollup(self, n_units: int, backend=None) -> np.ndarray:
@@ -56,10 +72,21 @@ class StarSchemaWarehouse:
         return be.segment_reduce(self.fact_table(), n_units)
 
     def fact_table(self) -> np.ndarray:
-        chunks = [c for parts in self._parts.values() for c in parts]
+        with self._lock:
+            chunks = [c for parts in self._parts.values() for c in parts]
         if not chunks:
             return np.zeros((0, len(FACT_COLUMNS)), np.float32)
         return np.concatenate(chunks)
+
+    def canonical_fact_table(self) -> np.ndarray:
+        """Fact table in a load-order-independent canonical order (full-row
+        lexicographic sort). Two runs produced the same warehouse iff their
+        canonical tables are byte-identical — the concurrency test's
+        equality oracle, immune to thread interleaving of loads."""
+        t = self.fact_table()
+        if not len(t):
+            return t
+        return t[np.lexsort(t.T[::-1])]
 
     def query_oee(self, equipment_id: Optional[int] = None) -> Dict[str, float]:
         """OLAP aggregate: mean KPI per (optionally one) equipment unit."""

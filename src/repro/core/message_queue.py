@@ -12,11 +12,27 @@ On a TPU pod the broker role is played by host memory + ICI; the observable
 contract (ordering per partition, at-least-once delivery, compaction) is
 preserved so higher stages are transport-agnostic (paper §3.3:
 technology-independence).
+
+Thread-safety contract (the concurrent runtime drives one broker from many
+worker threads):
+
+  * published batches are frozen (read-only columns), so consumers share
+    views without copies or races,
+  * per-topic locks guard the append path + compaction index; reads snapshot
+    the batch list and do their numpy work outside the lock,
+  * consumer-group offset state is split into *positions* (how far a group
+    has READ, advanced by ``fetch_many``) and *commits* (how far it has
+    durably PROCESSED, advanced by ``commit``). A worker that dies between
+    fetch and commit simply abandons its positions: the new owner of its
+    partitions resumes from the committed offset, so nothing is lost and
+    nothing is double-loaded (commit happens after warehouse load, under the
+    worker's commit lock).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+import threading
+from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -40,29 +56,40 @@ class Partition:
 
     def append(self, batch: RecordBatch):
         if len(batch):
-            self.batches.append(batch)
+            # freeze THEN publish: once the batch is reachable by consumer
+            # threads its columns are immutable; `length` is bumped last so
+            # a concurrent reader never sees a length without its batch
+            self.batches.append(batch.freeze())
             self.length += len(batch)
 
     def read(self, offset: int, max_records: Optional[int] = None
              ) -> RecordBatch:
-        if offset >= self.length:
+        # snapshot once: `batches` only ever grows at the tail and `length`
+        # is published after the append, so (list copy, length) read in this
+        # order can only under-report — never return a half-appended batch
+        batches = list(self.batches)
+        lens = [len(b) for b in batches]
+        length = min(self.length, sum(lens))
+        if offset >= length:
             return RecordBatch.empty()
-        out, seen = [], 0
-        budget = (self.length - offset if max_records is None else max_records)
-        for b in self.batches:
-            if seen + len(b) <= offset:
-                seen += len(b)
+        budget = length - offset
+        if max_records is not None:
+            budget = min(budget, max_records)
+        out, seen, taken = [], 0, 0
+        for b, lb in zip(batches, lens):
+            if seen + lb <= offset:
+                seen += lb
                 continue
             lo = max(0, offset - seen)
-            take = b.take(np.arange(lo, len(b)))
-            seen += len(b)
-            out.append(take)
-            if sum(len(o) for o in out) >= budget:
+            hi = min(lb, lo + (budget - taken))
+            out.append(b.slice(lo, hi))     # zero-copy view of frozen batch
+            taken += hi - lo
+            seen += lb
+            if taken >= budget:
                 break
-        batch = RecordBatch.concat(out)
-        if len(batch) > budget:
-            batch = batch.take(np.arange(budget))
-        return batch
+        if len(out) == 1:
+            return out[0]                   # still a view; batch is frozen
+        return RecordBatch.concat(out)
 
 
 class Topic:
@@ -72,12 +99,17 @@ class Topic:
         # compaction index: row_key -> (txn_time, payload, business_key)
         self._compact: Dict[int, Tuple[int, np.ndarray, int]] = {}
         self._compact_view = None    # lazily materialized columnar snapshot
+        self._lock = threading.Lock()   # serializes appends + compaction
 
     def publish(self, batch: RecordBatch) -> None:
         if not len(batch):
             return
         key = ("row_key" if self.cfg.partition_by == "row_key"
                else "business_key")
+        with self._lock:
+            self._publish_locked(batch, key)
+
+    def _publish_locked(self, batch: RecordBatch, key: str) -> None:
         for p, part_batch in batch.split_by_partition(
                 self.cfg.n_partitions, key=key):
             self.partitions[p].append(part_batch)
@@ -130,7 +162,8 @@ class Topic:
         set or a (sorted) integer array. Returns (row_keys, payloads,
         txn_times)."""
         assert self.cfg.compacted, "snapshot() requires a compacted topic"
-        rks, pls, tts, bks = self._compact_columns()
+        with self._lock:             # publishes mutate the compaction index
+            rks, pls, tts, bks = self._compact_columns()
         if business_keys is None or not len(rks):
             return rks, pls, tts
         from repro.core.partitioning import isin_sorted
@@ -145,11 +178,18 @@ class Topic:
 
 
 class MessageQueue:
-    """Broker: topics + consumer-group offsets (restartable consumption)."""
+    """Broker: topics + consumer-group offsets (restartable consumption).
+
+    ``offsets`` holds COMMITTED progress (durably processed, survives the
+    consumer); ``positions`` holds READ progress (advanced by ``fetch_many``
+    before the work is done). The gap between the two is a consumer's
+    in-flight window — abandoned wholesale if the consumer dies."""
 
     def __init__(self):
         self.topics: Dict[str, Topic] = {}
         self.offsets: Dict[Tuple[str, str, int], int] = {}  # (group, topic, part)
+        self.positions: Dict[Tuple[str, str, int], int] = {}
+        self._olock = threading.RLock()
 
     def create_topic(self, cfg: TopicConfig) -> Topic:
         self.topics[cfg.name] = Topic(cfg)
@@ -161,7 +201,8 @@ class MessageQueue:
     def consume(self, group: str, topic: str, partition: int,
                 max_records: Optional[int] = None) -> RecordBatch:
         key = (group, topic, partition)
-        off = self.offsets.get(key, 0)
+        with self._olock:
+            off = self.offsets.get(key, 0)
         batch = self.topics[topic].partitions[partition].read(off, max_records)
         return batch
 
@@ -176,7 +217,8 @@ class MessageQueue:
         counts: Dict[int, int] = {}
         t = self.topics[topic]
         for p in partitions:
-            off = self.offsets.get((group, topic, p), 0)
+            with self._olock:
+                off = self.offsets.get((group, topic, p), 0)
             if off >= t.partitions[p].length:     # drained: skip the read
                 continue
             b = t.partitions[p].read(off, max_records_per_partition)
@@ -185,22 +227,66 @@ class MessageQueue:
                 counts[p] = len(b)
         return RecordBatch.concat(out), counts
 
+    def fetch_many(self, group: str, topic: str, partitions: Iterable[int],
+                   max_records_per_partition: Optional[int] = None
+                   ) -> Tuple[RecordBatch, Dict[int, int]]:
+        """Position-advancing coalesced read (the concurrent runtime's
+        ingest stage). Unlike ``consume_many`` this moves the group's READ
+        position immediately, so the next fetch returns fresh records even
+        though nothing has been committed yet; the records only count as
+        processed when ``commit`` runs (after warehouse load). A fetch
+        always resumes from ``max(position, committed)`` so a partition
+        granted back after a rebalance never re-reads records the interim
+        owner committed."""
+        out: List[RecordBatch] = []
+        counts: Dict[int, int] = {}
+        t = self.topics[topic]
+        for p in partitions:
+            key = (group, topic, p)
+            with self._olock:
+                start = max(self.positions.get(key, 0),
+                            self.offsets.get(key, 0))
+                hw = t.partitions[p].length
+                if start >= hw:
+                    continue
+                take = hw - start
+                if max_records_per_partition is not None:
+                    take = min(take, max_records_per_partition)
+                self.positions[key] = start + take
+            b = t.partitions[p].read(start, take)
+            if len(b):
+                out.append(b)
+                counts[p] = len(b)
+        return RecordBatch.concat(out), counts
+
     def commit(self, group: str, topic: str, partition: int, n: int) -> None:
         key = (group, topic, partition)
-        self.offsets[key] = self.offsets.get(key, 0) + n
+        with self._olock:
+            self.offsets[key] = self.offsets.get(key, 0) + n
+
+    def rewind(self, group: str, topic: str, partition: int) -> None:
+        """Drop a group's read-ahead: next fetch resumes from the committed
+        offset (used when a worker dies with in-flight fetches)."""
+        with self._olock:
+            self.positions.pop((group, topic, partition), None)
 
     def lag(self, group: str, topic: str, partition: int) -> int:
         key = (group, topic, partition)
-        return (self.topics[topic].high_watermark(partition)
-                - self.offsets.get(key, 0))
+        with self._olock:
+            return (self.topics[topic].high_watermark(partition)
+                    - self.offsets.get(key, 0))
 
     def committed(self, group: str, topic: str, partition: int) -> int:
-        return self.offsets.get((group, topic, partition), 0)
+        with self._olock:
+            return self.offsets.get((group, topic, partition), 0)
 
     def restore_offsets(self, state: Dict) -> None:
-        self.offsets.update({tuple(k.split("|")): v for k, v in state.items()}
-                            if isinstance(next(iter(state), None), str)
-                            else state)
+        with self._olock:
+            self.offsets.update(
+                {tuple(k.split("|")): v for k, v in state.items()}
+                if isinstance(next(iter(state), None), str) else state)
+            self.positions.clear()   # read-ahead is not durable state
 
     def export_offsets(self) -> Dict:
-        return dict(self.offsets)
+        with self._olock:
+            return dict(self.offsets)

@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -152,6 +152,15 @@ class StreamProcessorWorker:
         return list(range(self.queue.topics[topic].cfg.n_partitions))
 
     # ------------------------------------------------------------ transform
+    def fetch_operational(self, topic: str, max_records: Optional[int] = None
+                          ) -> Tuple[RecordBatch, Dict[int, int]]:
+        """Position-advancing coalesced read of this worker's partitions,
+        WITHOUT committing (the concurrent runtime's ingest stage; commits
+        happen after warehouse load in its load stage). Returns
+        (batch, {partition: records_read})."""
+        return self.queue.fetch_many(self.group, topic, self.partitions,
+                                     max_records)
+
     def process_operational(self, topic: str, max_records: Optional[int] = None
                             ) -> int:
         """One micro-batch step over this worker's partitions: coalesced

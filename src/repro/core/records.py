@@ -59,6 +59,13 @@ class RecordBatch:
             *(getattr(self, f.name)[idx]
               for f in dataclasses.fields(RecordBatch)))
 
+    def slice(self, lo: int, hi: int) -> "RecordBatch":
+        """Zero-copy contiguous row range (column views). The broker's read
+        path slices frozen batches, so sharing the storage is safe."""
+        return RecordBatch(
+            *(getattr(self, f.name)[lo:hi]
+              for f in dataclasses.fields(RecordBatch)))
+
     def filter(self, mask: np.ndarray) -> "RecordBatch":
         return self.take(np.nonzero(mask)[0])
 
@@ -79,6 +86,17 @@ class RecordBatch:
                 for f in dataclasses.fields(RecordBatch)]
         return [(p, RecordBatch(*(c[bounds[p]:bounds[p + 1]] for c in cols)))
                 for p in range(n_partitions) if bounds[p + 1] > bounds[p]]
+
+    def freeze(self) -> "RecordBatch":
+        """Mark every column read-only. Published batches are shared across
+        worker threads (the broker hands out views, not copies), so freezing
+        at publish time turns a CONSUMER's accidental mutation into an
+        immediate ``ValueError`` instead of a data race. (Guard is
+        consumer-side only: a producer still holding the base arrays of a
+        view column could mutate through them.)"""
+        for f in dataclasses.fields(RecordBatch):
+            getattr(self, f.name).flags.writeable = False
+        return self
 
     def as_dict(self) -> Dict[str, np.ndarray]:
         return {f.name: getattr(self, f.name)

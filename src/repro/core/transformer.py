@@ -45,14 +45,22 @@ def transform_kernel(prod: jax.Array,
 
     eq_rows, eq_found, _ = lookup_ref(equip_id, eq_keys, eq_vals, eq_txn)
     q_rows, q_found, _ = lookup_ref(prod_id, q_keys, q_vals, q_txn)
-    # normalized-model join chains (§4.1.4 complexity knob): each extra hop
-    # re-probes the caches with a key derived from the previous hop's row —
-    # a real data dependency, like segment -> event -> detail joins
-    for hop in range(1, join_depth):
-        hop_key = (equip_id + jnp.int32(hop)) % jnp.int32(
-            max(eq_keys.shape[0] // 4, 1))
-        extra, _, _ = lookup_ref(hop_key, eq_keys, eq_vals, eq_txn)
-        eq_rows = eq_rows + 0.0 * extra  # keep the dependency alive
+    # normalized-model join chains (§4.1.4 complexity knob): every extra
+    # hop re-probes the cache. The hop keys are independent of the probed
+    # values, so all hops run as ONE flattened probe over [(jd-1)*n] keys —
+    # identical probe count and results, but a single wide dispatch instead
+    # of jd-1 narrow ones (narrow sequential probes thrash when worker
+    # threads dispatch concurrently)
+    if join_depth > 1:
+        mod = jnp.int32(max(eq_keys.shape[0] // 4, 1))
+        hop_keys = ((equip_id[None, :]
+                     + jnp.arange(1, join_depth, dtype=jnp.int32)[:, None])
+                    % mod)
+        extra, _, _ = lookup_ref(hop_keys.reshape(-1),
+                                 eq_keys, eq_vals, eq_txn)
+        # 0 * sum(hops) == sum of the per-hop 0-weighted adds
+        eq_rows = eq_rows + 0.0 * extra.reshape(
+            join_depth - 1, equip_id.shape[0], -1).sum(axis=0)
     found = eq_found & q_found
 
     t_start, t_end = prod[:, 3], prod[:, 4]
@@ -110,6 +118,24 @@ class DataTransformer:
     def watermark(self) -> int:
         return min(self.equipment.watermark, self.quality.watermark)
 
+    def transform_only(self, batch, equipment=None, quality=None
+                       ) -> Tuple[np.ndarray, np.ndarray]:
+        """Pure numeric transform of a RecordBatch: ONE backend dispatch,
+        no buffer interaction. Returns (facts [n, 10], found [n] bool).
+        The concurrent runtime's transform stage calls this with immutable
+        ``CacheSnapshot`` views (taken under the worker's cache lock) so
+        the dispatch itself runs LOCK-FREE and overlaps the ingest stage's
+        master pumps; late-record buffering and retries happen in the load
+        stage, under the worker's commit lock, so a mid-run kill can never
+        strand a record between the buffer and the warehouse."""
+        facts, found = self.backend.transform(
+            batch.payload,
+            equipment if equipment is not None else self.equipment,
+            quality if quality is not None else self.quality,
+            join_depth=self.join_depth)
+        self.dispatches += 1
+        return facts, found
+
     def process(self, prod_batch) -> Tuple[np.ndarray, int]:
         """prod_batch: RecordBatch of production records. Returns
         (facts [m, 10], n_late). Late records (missing master data) go to
@@ -127,10 +153,7 @@ class DataTransformer:
         if not n:
             return np.zeros((0, len(FACT_COLUMNS)), np.float32), 0
 
-        facts, found = self.backend.transform(
-            batch.payload, self.equipment, self.quality,
-            join_depth=self.join_depth)
-        self.dispatches += 1
+        facts, found = self.transform_only(batch)
         late = batch.filter(~found)
         self.buffer.push(late)
         self.records_late += len(late)

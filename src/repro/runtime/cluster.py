@@ -1,11 +1,27 @@
-"""Simulated elastic cluster for the paper's distributed experiments.
+"""Cluster runtimes for the paper's distributed experiments (§3.1
+"distributed, parallel"; §4.1.3 fault tolerance).
 
-One real CPU executes all workers, so *wall-clock parallelism is modeled,
-not real*: each round executes every worker's real JAX work serially and
-records per-worker wall time; cluster time-per-round = max over workers
-(+ straggler inflation), which is what a real cluster's barrier would
-observe. Consistency results are REAL (the fault-tolerance experiment's
-zero-error check re-validates every fact against a single-worker oracle).
+Two runtimes share the same Stream Processor workers:
+
+``ConcurrentCluster`` — the real one. Every worker runs on its own executor
+threads (numpy/jax release the GIL inside the hot ops, so worker steps
+genuinely overlap), with the per-worker ingest -> transform -> load stages
+decoupled by bounded hand-off queues. A coordinator owns the
+``PartitionAssignment`` and performs *incremental* rebalances: only moved
+partitions quiesce; healthy workers keep processing their retained
+partitions throughout a failover or elastic resize. Exactly-once handoff
+comes from the broker's position/commit split (fetch advances read
+positions; commits land after warehouse load, under the worker's commit
+lock), and §4.1.3's failure injection — kill workers mid-run under load —
+loses no records and duplicates none. Every loaded record reports its
+end-to-end freshness (load time minus the CDC append event-time stamp),
+aggregated as p50/p95/p99.
+
+``SimulatedCluster`` — the legacy modeled runtime: one thread executes all
+workers serially per round and cluster time-per-round = max over workers
+(a barrier model), with straggler/backup-task injection. Kept for the
+deterministic round-based experiments; consistency results in both
+runtimes are REAL (facts re-validated against a single-worker oracle).
 
 Failure injection reproduces §4.1.3: killed workers trigger coordinator
 rebalance -> cache-reset dumps on survivors -> throughput drop larger than
@@ -14,14 +30,17 @@ the node loss (the paper's observed 57% vs 40%).
 from __future__ import annotations
 
 import dataclasses
+import queue as queue_mod
+import threading
 import time
-from typing import Dict, List, Optional
+from typing import Dict, Iterable, List, Optional, Set
 
 import numpy as np
 
 from repro.configs.dod_etl import ETLConfig
-from repro.core.cdc import SourceDatabase
-from repro.core.pipeline import DODETLPipeline
+from repro.core.cdc import ChangeLog, SourceDatabase
+from repro.core.pipeline import DODETLPipeline, StreamProcessorWorker
+from repro.core.records import RecordBatch
 
 
 @dataclasses.dataclass
@@ -110,3 +129,642 @@ class SimulatedCluster:
         rec = sum(s.records for s in h)
         wall = sum(s.cluster_wall_s + s.cache_redump_s for s in h)
         return rec / wall if wall else 0.0
+
+
+# ===================================================================== real
+# concurrency below: the genuinely parallel runtime (ConcurrentCluster)
+
+def _percentiles_ms(samples: np.ndarray) -> Dict[str, float]:
+    if not len(samples):
+        return {"p50_ms": float("nan"), "p95_ms": float("nan"),
+                "p99_ms": float("nan"), "n": 0}
+    p50, p95, p99 = np.percentile(samples, [50, 95, 99])
+    return {"p50_ms": round(float(p50) * 1e3, 3),
+            "p95_ms": round(float(p95) * 1e3, 3),
+            "p99_ms": round(float(p99) * 1e3, 3), "n": int(len(samples))}
+
+
+class LatencyRecorder:
+    """Per-worker freshness samples (seconds between CDC append event time
+    and warehouse load). Appended by the worker's load stage; read by the
+    coordinator — a lock guards the chunk list, never the numpy math."""
+
+    def __init__(self):
+        self._chunks: List[np.ndarray] = []
+        self._lock = threading.Lock()
+
+    def add(self, samples: np.ndarray) -> None:
+        if len(samples):
+            with self._lock:
+                self._chunks.append(np.asarray(samples, np.float64))
+
+    def merged(self, drain: bool = False) -> np.ndarray:
+        with self._lock:
+            chunks = self._chunks
+            if drain:
+                self._chunks = []
+            else:
+                chunks = list(chunks)
+        if not chunks:
+            return np.zeros(0, np.float64)
+        return np.concatenate(chunks)
+
+
+@dataclasses.dataclass
+class _Work:
+    """Ingest -> transform hand-off: one coalesced fetch (uncommitted)."""
+    topic: str
+    batch: RecordBatch
+    counts: Dict[int, int]
+
+
+@dataclasses.dataclass
+class _Transformed:
+    """Transform -> load hand-off: facts awaiting the atomic load+commit."""
+    topic: str
+    batch: RecordBatch
+    counts: Dict[int, int]
+    facts: np.ndarray
+    found: np.ndarray
+
+
+@dataclasses.dataclass
+class _Control:
+    """Coordinator -> worker control-plane message (applied by the ingest
+    stage at its loop head, never mid-fetch)."""
+    kind: str                       # "revoke" | "grant"
+    partitions: Set[int]
+    ack: threading.Event = dataclasses.field(default_factory=threading.Event)
+    fetched_at_ack: int = 0         # revoke: in-flight quiesce horizon
+    redump_s: float = 0.0           # grant: cache-reset trigger cost
+
+
+class WorkerRuntime:
+    """One Stream Processor node's executor: three stage threads (ingest,
+    transform, load) around a ``StreamProcessorWorker``, decoupled by
+    bounded hand-off queues.
+
+      ingest    pumps master topics into the worker caches, then fetches
+                operational partitions (advancing broker READ positions,
+                committing nothing) and hands each coalesced batch off;
+      transform one backend dispatch per hand-off batch (GIL released in
+                the numeric core, so transforms of different workers
+                genuinely overlap);
+      load      the ONLY mutating stage: under the worker's commit lock it
+                buffers late records, loads facts, commits offsets and
+                records freshness samples — one atomic unit, so a kill
+                (which takes the same lock) can never observe a record
+                half-accounted.
+
+    Retry of buffered late records runs in the load stage too (pop -> probe
+    -> load -> re-buffer under the commit lock), preserving the same
+    atomicity for the §3.2 unsynchronized-consistency path.
+    """
+
+    _QUEUE_POLL_S = 0.05
+
+    def __init__(self, worker: StreamProcessorWorker, pipe: DODETLPipeline,
+                 max_records_per_partition: Optional[int] = None):
+        self.worker = worker
+        self.pipe = pipe
+        self.cap = max_records_per_partition
+        depth = max(1, pipe.cfg.handoff_depth)
+        self.transform_q: "queue_mod.Queue[_Work]" = queue_mod.Queue(depth)
+        self.load_q: "queue_mod.Queue[_Transformed]" = queue_mod.Queue(depth)
+        self.control: "queue_mod.Queue[_Control]" = queue_mod.Queue()
+        self.commit_lock = threading.Lock()
+        self.cache_lock = threading.Lock()
+        self.stop = threading.Event()
+        self.dead = False
+        self.fetched = 0             # hand-offs produced (ingest thread)
+        self.completed = 0           # hand-offs retired  (load thread)
+        self.records_done = 0
+        # record-level flow accounting, one writer per field: the ingest
+        # stage bounds every fetch by the late buffer's *headroom*
+        # (capacity - buffered - in-flight), so even a 100%-late cold-start
+        # backlog can never overflow the buffer and drop records
+        self.records_fetched = 0     # ingest thread
+        self.records_retired = 0     # load thread
+        self.retry_inflight = 0      # load thread: records popped by a
+                                     # retry sweep, not yet re-buffered
+        self.records_dropped_ingest = 0      # shutdown-path drops only
+        self.records_dropped_transform = 0
+        self.items_dropped_ingest = 0        # ditto, item granularity
+        self.items_dropped_transform = 0
+        self.latency = LatencyRecorder()
+        self._threads: List[threading.Thread] = []
+
+    # ---------------------------------------------------------------- state
+    @property
+    def alive(self) -> bool:
+        return bool(self._threads) and not self.dead and not self.stop.is_set()
+
+    def in_flight(self) -> int:
+        return (self.fetched - self.completed - self.items_dropped_ingest
+                - self.items_dropped_transform)
+
+    def start(self) -> None:
+        for fn, tag in ((self._ingest_loop, "ingest"),
+                        (self._transform_loop, "transform"),
+                        (self._load_loop, "load")):
+            t = threading.Thread(target=fn, daemon=True,
+                                 name=f"{self.worker.name}.{tag}")
+            t.start()
+            self._threads.append(t)
+
+    def join(self, timeout: float = 5.0) -> None:
+        for t in self._threads:
+            t.join(timeout)
+        self._threads = []
+
+    # ---------------------------------------------------------- stage plumbing
+    def _put(self, q: "queue_mod.Queue", item) -> bool:
+        while not self.stop.is_set():
+            try:
+                q.put(item, timeout=self._QUEUE_POLL_S)
+                return True
+            except queue_mod.Full:
+                continue
+        return False
+
+    def _get(self, q: "queue_mod.Queue"):
+        try:
+            return q.get(timeout=self._QUEUE_POLL_S)
+        except queue_mod.Empty:
+            return None
+
+    # ----------------------------------------------------------- stage: ingest
+    def _apply_control(self) -> None:
+        while True:
+            try:
+                msg = self.control.get_nowait()
+            except queue_mod.Empty:
+                return
+            w = self.worker
+            if msg.kind == "revoke":
+                w.partitions = [p for p in w.partitions
+                                if p not in msg.partitions]
+                msg.fetched_at_ack = self.fetched
+                msg.ack.set()
+            elif msg.kind == "grant":
+                with self.cache_lock:
+                    w.partitions = sorted(set(w.partitions) | msg.partitions)
+                    # the paper's cache-reset trigger: the key set changed
+                    msg.redump_s = w.reset_caches(
+                        self.pipe.master_topic_map,
+                        self.pipe.cfg.n_business_keys)
+                msg.ack.set()
+
+    def _buffer_headroom(self) -> int:
+        """Records we may still fetch without risking a late-buffer drop
+        even if EVERY in-flight record turns out late."""
+        in_flight = (self.records_fetched - self.records_retired
+                     - self.records_dropped_ingest
+                     - self.records_dropped_transform)
+        return (self.pipe.cfg.buffer_capacity - len(self.worker.buffer)
+                - in_flight - self.retry_inflight)
+
+    def _ingest_loop(self) -> None:
+        pipe, w = self.pipe, self.worker
+        while not self.stop.is_set():
+            self._apply_control()
+            with self.cache_lock:
+                w.pump_master(pipe.master_topic_map["equipment"], w.equipment)
+                w.pump_master(pipe.master_topic_map["quality"], w.quality)
+            got = 0
+            for topic in pipe.operational_topics:
+                if self.stop.is_set():
+                    break
+                # backpressure: a fetch may return up to cap records from
+                # EVERY owned partition, so the per-partition cap must keep
+                # the worst case within headroom — flooring it at 1 here
+                # would over-fetch and let a 100%-late batch overflow the
+                # buffer (dropping committed records for good)
+                cap = self._buffer_headroom() // max(1, len(w.partitions))
+                if cap < 1:
+                    break            # let retries drain the buffer first
+                if self.cap is not None:
+                    cap = min(cap, self.cap)
+                batch, counts = w.fetch_operational(topic, cap)
+                if counts:
+                    self.records_fetched += len(batch)
+                    self.fetched += 1
+                    if not self._put(self.transform_q,
+                                     _Work(topic, batch, counts)):
+                        self.items_dropped_ingest += 1   # shutdown only
+                        self.records_dropped_ingest += len(batch)
+                    got += len(batch)
+            if not got:
+                time.sleep(pipe.cfg.idle_backoff_s)
+
+    # -------------------------------------------------------- stage: transform
+    def _transform_loop(self) -> None:
+        device = self.worker.backend.device
+        while True:
+            item = self._get(self.transform_q)
+            if item is None:
+                if self.stop.is_set():
+                    return
+                continue
+            # hold the cache lock only long enough to pin an immutable
+            # snapshot; the dispatch itself runs lock-free, so the ingest
+            # stage's master pumps overlap the numeric core instead of
+            # queueing behind every dispatch
+            with self.cache_lock:
+                eq = self.worker.equipment.snapshot_view(device)
+                qu = self.worker.quality.snapshot_view(device)
+            facts, found = self.worker.transformer.transform_only(
+                item.batch, eq, qu)
+            if not self._put(self.load_q,
+                             _Transformed(item.topic, item.batch, item.counts,
+                                          facts, found)):
+                self.items_dropped_transform += 1        # shutdown only
+                self.records_dropped_transform += len(item.batch)
+
+    # ------------------------------------------------------------- stage: load
+    def _load_and_record(self, batch: RecordBatch, facts: np.ndarray,
+                         found: np.ndarray) -> int:
+        """Commit-lock-held helper: buffer lates, load facts, sample
+        freshness. Returns records loaded."""
+        w = self.worker
+        w.buffer.push(batch.filter(~found))
+        good = facts[found]
+        if not len(good):
+            return 0
+        w.warehouse.load_partitioned(good, self.pipe.cfg.n_partitions)
+        done_lsns = batch.lsn[found]
+        log = self.pipe.source.log
+        self.latency.add(log.clock() - log.event_times(done_lsns))
+        self.records_done += len(good)
+        return len(good)
+
+    def _retry_sweep(self) -> None:
+        w = self.worker
+        with self.commit_lock:
+            if self.dead or not len(w.buffer):
+                return
+            # publish the pop to the ingest stage's headroom accounting
+            # BEFORE shrinking the buffer, so a concurrent fetch can't
+            # claim the slots these records still occupy logically
+            self.retry_inflight = len(w.buffer)
+            limit = (self.cap * max(1, len(w.partitions))
+                     if self.cap else None)
+            ready = w.buffer.pop_ready(w.transformer.watermark(), limit)
+            if len(ready):
+                device = w.backend.device
+                with self.cache_lock:
+                    eq = w.equipment.snapshot_view(device)
+                    qu = w.quality.snapshot_view(device)
+                facts, found = w.transformer.transform_only(ready, eq, qu)
+                self._load_and_record(ready, facts, found)
+            self.retry_inflight = 0
+
+    def _load_loop(self) -> None:
+        while True:
+            item = self._get(self.load_q)
+            if item is None:
+                if self.stop.is_set() and self.transform_q.empty():
+                    return
+                self._retry_sweep()       # idle: drain watermark-ready lates
+                continue
+            with self.commit_lock:
+                if not self.dead:
+                    self._load_and_record(item.batch, item.facts, item.found)
+                    for p, c in item.counts.items():
+                        self.worker.queue.commit(self.worker.group,
+                                                 item.topic, p, c)
+                # retire AFTER the lates are buffered: between push and
+                # retirement the records are double-counted (buffer AND
+                # in-flight), which errs on the safe side of headroom
+                self.records_retired += len(item.batch)
+                # completed is bumped LAST, still under the lock: a
+                # coordinator quiescing on it (under this lock) is
+                # guaranteed to also observe the item's offset commits —
+                # bumping it first let a rebalance read a stale committed
+                # offset and replay a whole partition at its new owner
+                self.completed += 1
+            self._retry_sweep()
+
+
+class ConcurrentCluster:
+    """Coordinator + concurrent worker runtimes (the paper's §3.1 cluster,
+    executed for real). Owns the ``PartitionAssignment``; rebalances and
+    failovers are incremental — only moved partitions quiesce, healthy
+    workers never stop processing their retained partitions.
+
+    Usage::
+
+        pipe = DODETLPipeline(cfg, source, n_workers=4)
+        cluster = ConcurrentCluster(pipe)     # poll_cdc=True: extraction
+        cluster.start()                       # thread tails the change log
+        ... feed source / wait ...
+        cluster.run_until_idle()
+        report = cluster.report()             # throughput + p50/p95/p99
+        cluster.stop_all()
+    """
+
+    def __init__(self, pipe: DODETLPipeline, *,
+                 max_records_per_partition: Optional[int] = None,
+                 poll_cdc: bool = True):
+        self.pipe = pipe
+        self.cap = max_records_per_partition
+        self.poll_cdc = poll_cdc
+        self.runtimes: Dict[str, WorkerRuntime] = {
+            w.name: WorkerRuntime(w, pipe, max_records_per_partition)
+            for w in pipe.workers}
+        self.assignment = pipe.assignment
+        self.redump_s_total = 0.0
+        self._extract_thread: Optional[threading.Thread] = None
+        self._stop_extract = threading.Event()
+        self._next_worker_idx = len(pipe.workers)
+        self._t_start: Optional[float] = None
+
+    # --------------------------------------------------------------- lifecycle
+    def start(self) -> None:
+        self._t_start = time.perf_counter()
+        for rt in self.runtimes.values():
+            rt.start()
+        if self.poll_cdc:
+            self._extract_thread = threading.Thread(
+                target=self._extract_loop, daemon=True, name="cdc.extract")
+            self._extract_thread.start()
+
+    def _extract_loop(self) -> None:
+        tracker = self.pipe.tracker
+        idle = self.pipe.cfg.idle_backoff_s
+        while not self._stop_extract.is_set():
+            if tracker.poll_all() == 0:
+                time.sleep(idle)
+
+    def stop_all(self) -> None:
+        self._stop_extract.set()
+        for rt in self.runtimes.values():
+            rt.stop.set()
+        if self._extract_thread is not None:
+            self._extract_thread.join(5.0)
+            self._extract_thread = None
+        for rt in self.runtimes.values():
+            rt.join()
+
+    # ---------------------------------------------------------------- metrics
+    def alive_workers(self) -> List[str]:
+        return [n for n, rt in self.runtimes.items() if not rt.dead]
+
+    def records_done(self) -> int:
+        return sum(rt.records_done for rt in self.runtimes.values())
+
+    def freshness(self, drain: bool = False) -> Dict[str, float]:
+        merged = [rt.latency.merged(drain) for rt in self.runtimes.values()]
+        return _percentiles_ms(np.concatenate(merged) if merged
+                               else np.zeros(0))
+
+    def report(self) -> Dict[str, float]:
+        wall = (time.perf_counter() - self._t_start) if self._t_start else 0.0
+        done = self.records_done()
+        out = {"records": done, "wall_s": round(wall, 4),
+               "records_s": round(done / wall) if wall > 0 else 0,
+               "n_workers": len(self.alive_workers()),
+               "redump_s": round(self.redump_s_total, 4)}
+        out.update(self.freshness())
+        return out
+
+    # ------------------------------------------------------------ idle waiting
+    def _operational_lag(self) -> int:
+        q = self.pipe.queue
+        lag = 0
+        group_of = {n: rt.worker.group for n, rt in self.runtimes.items()}
+        for topic in self.pipe.operational_topics:
+            hw = [q.topics[topic].high_watermark(p)
+                  for p in range(q.topics[topic].cfg.n_partitions)]
+            for p, owner in self.assignment.assignment.items():
+                lag += max(0, hw[p] - q.committed(group_of[owner], topic, p))
+        return lag
+
+    def _extraction_lag(self) -> int:
+        log = self.pipe.source.log
+        return sum(max(0, log.next_lsn - l.offset)
+                   for l in self.pipe.tracker.listeners)
+
+    def _idle_buffered(self) -> Optional[int]:
+        """None while any work is in flight; otherwise the total number of
+        late-buffered records observed at a provably quiescent instant.
+        Taking each worker's commit lock excludes the one blind spot plain
+        counters have: a retry sweep that has popped buffered records but
+        not yet loaded them."""
+        if self.poll_cdc and self._extraction_lag() > 0:
+            return None
+        buffered = 0
+        for rt in self.runtimes.values():
+            if rt.dead:
+                continue
+            with rt.commit_lock:
+                if rt.in_flight() > 0 or not rt.transform_q.empty() \
+                        or not rt.load_q.empty():
+                    return None
+                buffered += len(rt.worker.buffer)
+        if self._operational_lag() != 0:
+            return None
+        return buffered
+
+    def idle(self) -> bool:
+        """True when there is provably nothing left to do right now."""
+        return self._idle_buffered() is not None
+
+    def run_until_idle(self, timeout: float = 120.0,
+                       stall_s: float = 2.0) -> int:
+        """Block until the stream is drained (lag 0, no in-flight work,
+        empty late buffers) or no progress has been made for ``stall_s``
+        (e.g. buffered records whose master data never arrives — the
+        paper's watermark semantics say those WAIT, so a stall is a clean
+        exit, not an error). Returns total records loaded."""
+        t0 = time.perf_counter()
+        last = (-1, -1)
+        last_change = t0
+        while time.perf_counter() - t0 < timeout:
+            buffered = self._idle_buffered()
+            state = (self.records_done(), buffered)
+            if state != last:
+                last, last_change = state, time.perf_counter()
+            if buffered is not None:
+                if buffered == 0:
+                    return self.records_done()
+                if time.perf_counter() - last_change > stall_s:
+                    return self.records_done()   # watermark-stalled lates
+            time.sleep(0.01)
+        return self.records_done()
+
+    # ----------------------------------------------------- coordinator actions
+    def _quiesce(self, rt: WorkerRuntime, horizon: int,
+                 timeout: float = 10.0) -> None:
+        """Wait until every hand-off fetched before ``horizon`` has retired.
+        The worker keeps processing; only the coordinator waits. Reading
+        ``completed`` under the worker's commit lock guarantees the retired
+        items' offset commits are visible before the coordinator moves on
+        to the offset transfer."""
+        t0 = time.perf_counter()
+        while not rt.dead:
+            with rt.commit_lock:
+                done = (rt.completed + rt.items_dropped_ingest
+                        + rt.items_dropped_transform)
+            if done >= horizon:
+                return
+            if time.perf_counter() - t0 > timeout:
+                raise RuntimeError(
+                    f"quiesce timeout for {rt.worker.name}")
+            time.sleep(0.002)
+
+    def _rebalance_to(self, alive: List[str]) -> float:
+        """Incremental rebalance: revoke moved partitions from their live
+        owners, quiesce ONLY those workers' in-flight windows, transfer
+        committed offsets, then grant (which fires the §3.2 cache-reset
+        trigger on the new owners). Healthy workers never stop consuming
+        the partitions they keep."""
+        pipe = self.pipe
+        old_owner = dict(self.assignment.assignment)
+        old_group = {n: rt.worker.group for n, rt in self.runtimes.items()}
+        self.assignment.rebalance(alive)
+        moved: Dict[str, List[int]] = {}
+        grants: Dict[str, List[int]] = {}
+        for p, new_w in self.assignment.assignment.items():
+            ow = old_owner.get(p)
+            if ow == new_w:
+                continue
+            if ow is not None:
+                moved.setdefault(ow, []).append(p)
+            grants.setdefault(new_w, []).append(p)
+
+        # phase 1: revoke from live old owners, quiesce their in-flight work
+        pending = []
+        for ow, parts in moved.items():
+            rt = self.runtimes.get(ow)
+            if rt is None or rt.dead:
+                continue
+            msg = _Control("revoke", set(parts))
+            rt.control.put(msg)
+            pending.append((rt, msg))
+        for rt, msg in pending:
+            if not msg.ack.wait(10.0):
+                raise RuntimeError(f"revoke ack timeout for {rt.worker.name}")
+            self._quiesce(rt, msg.fetched_at_ack)
+
+        # phase 2: exactly-once offset handoff for every moved partition
+        q = pipe.queue
+        for p, new_w in self.assignment.assignment.items():
+            ow = old_owner.get(p)
+            if ow is None or ow == new_w:
+                continue
+            og = old_group.get(ow)
+            ng = self.runtimes[new_w].worker.group
+            for topic in pipe.operational_topics:
+                committed = q.committed(og, topic, p)
+                own = q.committed(ng, topic, p)
+                if committed > own:
+                    q.commit(ng, topic, p, committed - own)
+                q.rewind(og, topic, p)    # abandon the old read-ahead
+
+        # phase 3: grant (cache-reset trigger on changed key sets)
+        redump = 0.0
+        pending = []
+        for nw, parts in grants.items():
+            msg = _Control("grant", set(parts))
+            self.runtimes[nw].control.put(msg)
+            pending.append((self.runtimes[nw], msg))
+        for rt, msg in pending:
+            if not msg.ack.wait(10.0):
+                raise RuntimeError(f"grant ack timeout for {rt.worker.name}")
+            redump += msg.redump_s
+        self.redump_s_total += redump
+        self._redistribute_buffers()
+        return redump
+
+    def _redistribute_buffers(self) -> None:
+        """Re-home buffered late records to their partitions' CURRENT
+        owners (the paper's replicated buffer store makes them reachable by
+        any worker). Without this, a record buffered by a worker that then
+        loses the record's partition would starve forever: its probes run
+        against a cache that no longer holds the record's business keys."""
+        from repro.core.partitioning import partition_of
+        orphans: List[RecordBatch] = []
+        for rt in self.runtimes.values():
+            if rt.dead:
+                continue
+            with rt.commit_lock:
+                held = rt.worker.buffer.drain()
+            if len(held):
+                orphans.append(held)
+        if not orphans:
+            return
+        merged = RecordBatch.concat(orphans)
+        parts = partition_of(merged.business_key,
+                             self.pipe.cfg.n_partitions)
+        for name, rt in self.runtimes.items():
+            if rt.dead:
+                continue
+            owned = [p for p, w in self.assignment.assignment.items()
+                     if w == name]
+            if not owned:
+                continue
+            mine = merged.filter(np.isin(parts, np.asarray(owned, np.int32)))
+            if len(mine):
+                with rt.commit_lock:
+                    rt.worker.buffer.push(mine)
+
+    def fail_workers(self, names: Iterable[str]) -> float:
+        """§4.1.3 failure injection under load: fail-stop the named workers
+        (their consumed-but-uncommitted hand-offs are discarded — the broker
+        re-serves those records to the partitions' new owners from the
+        committed offsets), reassign their partitions incrementally, adopt
+        their replicated late buffers. Returns cache re-dump seconds."""
+        names = list(names)
+        dead_rts = []
+        for n in names:
+            rt = self.runtimes[n]
+            with rt.commit_lock:       # atomic vs the load stage
+                rt.dead = True
+            rt.stop.set()
+            dead_rts.append(rt)
+        for rt in dead_rts:
+            rt.join()
+        alive = [n for n in self.runtimes if not self.runtimes[n].dead]
+        if not alive:
+            raise RuntimeError("all workers failed")
+        self.pipe.workers = [w for w in self.pipe.workers
+                             if w.name not in names]
+        # replicated-buffer adoption: a survivor inherits the dead workers'
+        # late records before the rebalance; `_rebalance_to` then re-homes
+        # every buffered record to its partition's new owner (only
+        # committed records ever enter a buffer, so this cannot duplicate
+        # anything the broker will re-serve)
+        target = self.runtimes[alive[0]]
+        for rt in dead_rts:
+            orphan = rt.worker.buffer.drain()
+            if len(orphan):
+                with target.commit_lock:
+                    target.worker.buffer.push(orphan)
+        return self._rebalance_to(alive)
+
+    def scale_to(self, n_workers: int) -> float:
+        """Elastic resize (paper §3.2 'cluster scales up or down') without
+        stopping the running stream."""
+        alive = self.alive_workers()
+        if n_workers < len(alive):
+            return self.fail_workers(alive[n_workers:])
+        if n_workers == len(alive):
+            return 0.0
+        new_names = []
+        for _ in range(n_workers - len(alive)):
+            name = f"w{self._next_worker_idx}"
+            self._next_worker_idx += 1
+            w = StreamProcessorWorker(
+                name, self.pipe.cfg, self.pipe.queue, self.pipe.warehouse,
+                self.pipe.workers[0].transformer.join_depth
+                if self.pipe.workers else 1,
+                backend=self.pipe.backend)
+            w.partitions = []
+            self.pipe.workers.append(w)
+            rt = WorkerRuntime(w, self.pipe, self.cap)
+            self.runtimes[name] = rt
+            if self._t_start is not None:
+                rt.start()
+            new_names.append(name)
+        return self._rebalance_to(alive + new_names)
