@@ -46,6 +46,11 @@ def main() -> None:
     emit("kernel.hash_join", K.bench_hash_join())
     emit("kernel.transform", K.bench_transform())
 
+    # read-side serving layer: incremental-view query speedup + staleness
+    # (full sweep: python -m benchmarks.report_serving -> BENCH_views.json)
+    from benchmarks import report_serving as RS
+    emit("serving", RS.summary(quick=args.quick))
+
     # roofline summary (if the dry-run matrix has been produced)
     try:
         from benchmarks.roofline import load_cells, roofline_fraction

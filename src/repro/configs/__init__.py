@@ -12,15 +12,13 @@ from repro.configs.base import (  # noqa: F401
     get_smoke_config,
     list_archs,
 )
+# one registered architecture per model family (dense / vlm / ssm / moe /
+# hybrid / enc-dec) — the redundant same-family seed configs were pruned
 from repro.configs import (  # noqa: F401
     whisper_small,
     internlm2_1_8b,
-    granite_20b,
-    starcoder2_7b,
-    deepseek_coder_33b,
     qwen2_vl_7b,
     rwkv6_7b,
-    phi3_5_moe,
     qwen2_moe_a2_7b,
     zamba2_1_2b,
 )

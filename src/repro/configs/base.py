@@ -3,7 +3,7 @@
 One ``ModelConfig`` dataclass covers all assigned architecture families:
 dense decoder-only transformers (GQA/MQA), encoder-decoder (whisper),
 VLM backbones (qwen2-vl), attention-free SSMs (rwkv6), MoE transformers
-(phi3.5-moe, qwen2-moe) and hybrids (zamba2: Mamba2 + shared attention).
+(qwen2-moe) and hybrids (zamba2: Mamba2 + shared attention).
 
 Every architecture registers itself in ``REGISTRY`` via ``register``;
 ``get_config(arch_id)`` returns the full published config and

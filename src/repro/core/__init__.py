@@ -22,7 +22,8 @@ from repro.core.transformer import (  # noqa: F401
     transform_kernel,
     FACT_COLUMNS,
 )
-from repro.core.loader import StarSchemaWarehouse  # noqa: F401
+from repro.core.loader import StarSchemaWarehouse, WarehouseView  # noqa: F401
+from repro.core.metrics import LatencyRecorder, percentiles_ms  # noqa: F401
 from repro.core.pipeline import DODETLPipeline, StreamProcessorWorker  # noqa: F401
 from repro.core.baseline import BaselineStreamProcessor  # noqa: F401
 from repro.core.partitioning import (  # noqa: F401

@@ -9,7 +9,13 @@ against the ``ComputeBackend`` protocol:
   * ``transform``      — the fused fact-grain transform: both cache probes +
                          interval intersection (Fig. 3) + OEE KPI math (§4),
   * ``segment_reduce`` — per-equipment KPI rollup of a fact block (the OLAP
-                         aggregate the Target Database Updater feeds).
+                         aggregate the Target Database Updater feeds),
+  * ``fold_segments``  — the serving layer's incremental-view delta fold:
+                         fused multi-statistic segmented aggregate
+                         (count + sum + min + max per segment per value
+                         lane) of one fact delta, in ONE dispatch
+                         (``repro.serving.engine`` folds these into
+                         materialized report views).
 
 Three registered implementations:
 
@@ -44,6 +50,92 @@ ENV_VAR = "DODETL_BACKEND"
 N_FACT = 10
 KPI_LANES = 5   # availability, performance, quality, oee, count
 
+# ------------------------------------------------------------- fold layout
+# ``fold_segments`` packs its fused statistics as one [n_segments, W] f32
+# table, W = 1 + 3 * n_lanes: [count | sums(L) | mins(L) | maxs(L)].
+# Empty segments carry count 0, sum 0, min +inf, max -inf — the identity
+# elements, so folds combine associatively lane-by-lane.
+FOLD_BLOCK = 2048   # max rows per fold dispatch (bounds the [B, S, L] temp)
+
+
+def fold_width(n_lanes: int) -> int:
+    return 1 + 3 * n_lanes
+
+
+def empty_fold_state(n_segments: int, n_lanes: int) -> np.ndarray:
+    """The fold identity: what every view's aggregate state starts as."""
+    out = np.zeros((n_segments, fold_width(n_lanes)), np.float32)
+    out[:, 1 + n_lanes:1 + 2 * n_lanes] = np.inf
+    out[:, 1 + 2 * n_lanes:] = -np.inf
+    return out
+
+
+def combine_fold(state: np.ndarray, delta: np.ndarray) -> np.ndarray:
+    """Associative combine of two packed fold tables (host, elementwise —
+    the same ops in every backend, so combining is bitwise deterministic).
+    Returns a NEW array; never mutates either input (the serving layer's
+    published epochs are immutable)."""
+    L = (state.shape[1] - 1) // 3
+    out = np.empty_like(state)
+    out[:, :1 + L] = state[:, :1 + L] + delta[:, :1 + L]          # count+sum
+    out[:, 1 + L:1 + 2 * L] = np.minimum(state[:, 1 + L:1 + 2 * L],
+                                         delta[:, 1 + L:1 + 2 * L])
+    out[:, 1 + 2 * L:] = np.maximum(state[:, 1 + 2 * L:],
+                                    delta[:, 1 + 2 * L:])
+    return out
+
+
+def _fold_tree_np(seg: np.ndarray, vals: np.ndarray,
+                  n_segments: int) -> np.ndarray:
+    """Reference fold of ONE padded power-of-two block: a fixed pairwise
+    halving tree over the one-hot-masked lanes. Every op is an exact or
+    correctly-rounded IEEE elementwise op applied in a shape-determined
+    order, so the jax twin (same tree) produces bitwise-identical results —
+    the property behind the serving layer's byte-identical
+    incremental-vs-recompute equivalence tests. Rows with seg outside
+    [0, n_segments) (including the -1 padding) contribute the identity."""
+    onehot = seg[:, None] == np.arange(n_segments, dtype=seg.dtype)[None, :]
+    oh = onehot.astype(np.float32)                       # [B, S]
+    cnt = oh
+    sums = oh[:, :, None] * vals[:, None, :]             # exact: x*{0,1}
+    mins = np.where(onehot[:, :, None], vals[:, None, :],
+                    np.float32(np.inf))
+    maxs = np.where(onehot[:, :, None], vals[:, None, :],
+                    np.float32(-np.inf))
+    while cnt.shape[0] > 1:
+        h = cnt.shape[0] // 2
+        cnt = cnt[:h] + cnt[h:]
+        sums = sums[:h] + sums[h:]
+        mins = np.minimum(mins[:h], mins[h:])
+        maxs = np.maximum(maxs[:h], maxs[h:])
+    return np.concatenate([cnt[0][:, None], sums[0], mins[0], maxs[0]],
+                          axis=1)
+
+
+def _fold_blocks(seg: np.ndarray, vals: np.ndarray, n_segments: int,
+                 tree) -> np.ndarray:
+    """Shared delta driver: chunk the delta into <= FOLD_BLOCK row blocks,
+    pad each to a power of two with seg = -1 identity rows, fold each block
+    through ``tree`` and chain the partials in block order (host combine).
+    Block boundaries depend only on the delta length, so replaying the same
+    delta sequence reproduces the same op order bit-for-bit."""
+    seg = np.asarray(seg, np.int64)
+    vals = np.asarray(vals, np.float32)
+    if vals.ndim == 1:
+        vals = vals[:, None]
+    n, L = vals.shape
+    out = empty_fold_state(n_segments, L)
+    for lo in range(0, n, FOLD_BLOCK):
+        s = seg[lo:lo + FOLD_BLOCK]
+        v = vals[lo:lo + FOLD_BLOCK]
+        m = len(s)
+        bucket = max(8, 1 << (m - 1).bit_length())
+        if bucket != m:
+            s = np.concatenate([s, np.full(bucket - m, -1, np.int64)])
+            v = np.concatenate([v, np.zeros((bucket - m, L), np.float32)])
+        out = combine_fold(out, tree(s, v, n_segments))
+    return out
+
 
 class ComputeBackend:
     """Protocol + shared helpers. Subclass and register to add a backend."""
@@ -71,6 +163,15 @@ class ComputeBackend:
         """Per-equipment KPI rollup of a fact block: sums
         [availability, performance, quality, oee, count] over valid facts.
         Returns host [n_units, KPI_LANES] f32."""
+        raise NotImplementedError
+
+    def fold_segments(self, seg_ids: np.ndarray, values: np.ndarray,
+                      n_segments: int) -> np.ndarray:
+        """Fused multi-statistic delta fold for incremental materialized
+        views: per segment, count + sum + min + max of every value lane in
+        one dispatch. ``seg_ids`` [n] int, ``values`` [n, L] f32; rows with
+        seg outside [0, n_segments) contribute nothing. Returns the packed
+        host table [n_segments, 1 + 3L] (see ``fold_width``)."""
         raise NotImplementedError
 
     # -------------------------------------------------------------- helpers
@@ -190,6 +291,9 @@ class NumpyBackend(ComputeBackend):
         np.add.at(agg, unit[keep], kpis)
         return agg
 
+    def fold_segments(self, seg_ids, values, n_segments):
+        return _fold_blocks(seg_ids, values, n_segments, _fold_tree_np)
+
 
 def _kpi_facts_np(prod, eq_rows, q_rows, found) -> np.ndarray:
     """Host twin of ``transformer.transform_kernel``'s KPI math (same op
@@ -258,6 +362,17 @@ class JaxBackend(ComputeBackend):
         padded = self._pad_bucket(facts, floor=128)  # pads are valid=0 rows
         return np.asarray(_rollup_jnp(jnp.asarray(padded), n_units))
 
+    def fold_segments(self, seg_ids, values, n_segments):
+        # the jitted twin of the numpy halving tree: identical op order on
+        # static shapes, so results are BITWISE equal to the numpy backend
+        # (asserted by tests/test_serving.py) while the dispatch itself is
+        # one fused XLA call per block
+        def tree(s, v, ns):
+            import jax.numpy as jnp
+            return np.asarray(_fold_tree_jnp(jnp.asarray(s, jnp.int32),
+                                             jnp.asarray(v), ns))
+        return _fold_blocks(seg_ids, values, n_segments, tree)
+
 
 _ROLLUP_JIT = None
 
@@ -284,6 +399,42 @@ def _rollup_jnp(facts, n_units: int):
 
         _ROLLUP_JIT = rollup
     return _ROLLUP_JIT(facts, n_units)
+
+
+_FOLD_JIT = None
+
+
+def _fold_tree_jnp(seg, vals, n_segments: int):
+    """jnp twin of ``_fold_tree_np``: the SAME fixed halving tree of exact
+    multiplies and correctly-rounded adds/min/max, so XLA produces bitwise
+    the numpy result (the tree is shape-unrolled at trace time — one
+    compile per (block, n_segments, lanes) bucket)."""
+    global _FOLD_JIT
+    if _FOLD_JIT is None:
+        import functools
+
+        import jax
+        import jax.numpy as jnp
+
+        @functools.partial(jax.jit, static_argnames=("n_segments",))
+        def fold(seg, vals, n_segments):
+            onehot = seg[:, None] == jnp.arange(n_segments, dtype=seg.dtype)
+            oh = onehot.astype(jnp.float32)
+            cnt = oh
+            sums = oh[:, :, None] * vals[:, None, :]
+            mins = jnp.where(onehot[:, :, None], vals[:, None, :], jnp.inf)
+            maxs = jnp.where(onehot[:, :, None], vals[:, None, :], -jnp.inf)
+            while cnt.shape[0] > 1:
+                h = cnt.shape[0] // 2
+                cnt = cnt[:h] + cnt[h:]
+                sums = sums[:h] + sums[h:]
+                mins = jnp.minimum(mins[:h], mins[h:])
+                maxs = jnp.maximum(maxs[:h], maxs[h:])
+            return jnp.concatenate(
+                [cnt[0][:, None], sums[0], mins[0], maxs[0]], axis=1)
+
+        _FOLD_JIT = fold
+    return _FOLD_JIT(seg, vals, n_segments)
 
 
 # ========================================================== pallas backend
@@ -345,9 +496,25 @@ class PallasBackend(ComputeBackend):
         return np.asarray(segment_rollup(jnp.asarray(padded),
                                          n_units=n_units))
 
+    def fold_segments(self, seg_ids, values, n_segments):
+        # fused kernel path: one-hot MXU matmul for count+sum, masked lane
+        # reductions for min/max (see kernels/segment_kpi). The MXU's
+        # reduction order differs from the halving tree, so this backend is
+        # parity-checked to ~1e-5, not bitwise (same contract as the other
+        # pallas ops).
+        def tree(s, v, ns):
+            import jax.numpy as jnp
+            from repro.kernels.segment_kpi.ops import fold_segments
+            packed = jnp.concatenate(
+                [jnp.asarray(s, jnp.float32)[:, None], jnp.asarray(v)],
+                axis=1)
+            return np.asarray(fold_segments(packed, n_segments=ns))
+        return _fold_blocks(seg_ids, values, n_segments, tree)
+
 
 __all__ = [
     "ComputeBackend", "NumpyBackend", "JaxBackend", "PallasBackend",
     "register_backend", "get_backend", "available_backends",
     "resolve_backend_name", "DEFAULT_BACKEND", "ENV_VAR", "KPI_LANES",
+    "FOLD_BLOCK", "fold_width", "empty_fold_state", "combine_fold",
 ]

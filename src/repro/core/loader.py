@@ -3,13 +3,27 @@ transformed facts into the star-schema warehouse.
 
 ``StarSchemaWarehouse`` holds one fact table (OEE fact grains) plus the
 equipment dimension; loads are per-partition appends (each partition
-'executes its query statements independently'). ``query_oee`` is the OLAP
-read path used by tests/examples to validate end-to-end correctness.
+'executes its query statements independently'). Two read paths:
+
+* the ad-hoc OLAP path (``query_oee`` / ``kpi_rollup`` / ``fact_table``)
+  — full-rescan aggregates. All three read a pinned per-partition view of
+  COMMITTED state (``read_view``): a load appends its chunks and bumps the
+  commit sequence under one lock acquisition, and a view pins the chunk
+  log at a commit boundary — so a report that issues several queries
+  against one view can never observe a partition mid-``load`` from a
+  concurrent worker (the torn-report race the serving layer also closes);
+
+* the serving path — every load publishes its fact block (plus the
+  records' CDC event-time stamps) as a delta to an attached
+  ``repro.serving.MaterializedViewEngine``, which maintains report views
+  incrementally in O(delta). ``attach_serving`` replays the committed
+  chunk log first, so views cover history loaded before attachment.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -17,80 +31,137 @@ from repro.core.partitioning import partition_bounds
 from repro.core.transformer import FACT_COLUMNS
 
 
+@dataclasses.dataclass(frozen=True)
+class WarehouseView:
+    """A pinned, immutable view of committed warehouse state: the chunk
+    log as of one commit boundary. Everything a reader computes from one
+    view is mutually consistent no matter how many concurrent loads land
+    while it is held."""
+
+    chunks: Tuple[np.ndarray, ...]           # committed fact blocks, in
+    seq: int                                 # commit order
+    rows: int
+
+
 class StarSchemaWarehouse:
     """Loads are thread-safe: the concurrent runtime's load stages append
-    from one thread per worker, so the partition map, row counter and reads
-    are guarded by a single lock (the numpy split work stays outside it)."""
+    from one thread per worker, so the chunk log, commit sequence and
+    delta publication are guarded by a single lock (the numpy split work
+    stays outside it)."""
 
     def __init__(self, backend=None):
-        self._parts: Dict[int, List[np.ndarray]] = {}
+        self._chunk_log: List[np.ndarray] = []   # committed blocks, in order
         self._lock = threading.Lock()
+        self._serving = None                 # MaterializedViewEngine (opt.)
         self.backend = backend       # pipeline's ComputeBackend (or None)
         self.rows_loaded = 0
         self.load_calls = 0
+        self.commit_seq = 0
 
-    def load(self, partition: int, facts: np.ndarray) -> None:
+    # ------------------------------------------------------------ serving hook
+    def attach_serving(self, engine):
+        """Wire a view engine: every committed load is published as one
+        fact delta, in commit order (the publish happens under the load
+        lock, so delta order == chunk-log order — what makes the engine's
+        ``rebuild`` oracle byte-identical). History already loaded is
+        replayed first. Returns the engine for chaining."""
+        with self._lock:
+            for chunk in self._chunk_log:
+                engine.publish(chunk)
+            self._serving = engine
+        return engine
+
+    def _commit(self, block: np.ndarray,
+                event_times: Optional[np.ndarray]) -> None:
+        """Lock-held: record the block in the committed chunk log, bump the
+        commit sequence, publish the delta."""
+        self._chunk_log.append(block)
+        self.commit_seq += 1
+        if self._serving is not None:
+            self._serving.publish(block, event_times)
+
+    # -------------------------------------------------------------- load paths
+    def load(self, partition: int, facts: np.ndarray,
+             event_times: Optional[np.ndarray] = None) -> None:
+        """Per-partition append (the caller already split by partition)."""
         if len(facts) == 0:
             return
         facts = np.asarray(facts)
         with self._lock:
-            self._parts.setdefault(partition, []).append(facts)
             self.rows_loaded += len(facts)
             self.load_calls += 1
+            self._commit(facts, event_times)
 
-    def load_partitioned(self, facts: np.ndarray, n_partitions: int) -> int:
-        """Split a coalesced fact block back per business-key partition
-        (fact col 0 IS the business key) and append each slice — the ONLY
-        point where the single-dispatch micro-batch re-partitions. The
-        numpy split happens outside the lock; all partition appends then
-        land under ONE acquisition (concurrent workers' load stages share
-        this lock, so per-partition locking would contend ~n_partitions
-        times per dispatch)."""
+    def load_partitioned(self, facts: np.ndarray, n_partitions: int,
+                         event_times: Optional[np.ndarray] = None) -> int:
+        """Group a coalesced fact block by business-key partition (fact
+        col 0 IS the business key — each partition's rows land contiguous,
+        'executing its query statements independently') and commit it as
+        ONE block. The numpy sort happens outside the lock; the append,
+        commit-sequence bump and serving delta land under ONE acquisition
+        (concurrent workers' load stages share this lock, so per-partition
+        locking would contend ~n_partitions times per dispatch — and a
+        reader pinning a view can never see half a load)."""
         n = len(facts)
         if n == 0:
             return 0
         order, bounds = partition_bounds(facts[:, 0].astype(np.int64),
                                          n_partitions)
         sorted_facts = facts[order]
-        slices = [(p, sorted_facts[bounds[p]:bounds[p + 1]])
-                  for p in range(n_partitions)
-                  if bounds[p + 1] > bounds[p]]
+        sorted_times = (np.asarray(event_times, np.float64)[order]
+                        if event_times is not None else None)
+        n_hit = sum(1 for p in range(n_partitions)
+                    if bounds[p + 1] > bounds[p])
         with self._lock:
-            for p, chunk in slices:
-                self._parts.setdefault(p, []).append(chunk)
-                self.rows_loaded += len(chunk)
-                self.load_calls += 1
+            self.rows_loaded += n
+            self.load_calls += n_hit     # one logical append per partition
+            self._commit(sorted_facts, sorted_times)
         return n
 
-    def kpi_rollup(self, n_units: int, backend=None) -> np.ndarray:
+    # -------------------------------------------------------------- read paths
+    def read_view(self) -> WarehouseView:
+        """Pin the committed state at the current commit boundary. The
+        returned chunks are the loaded arrays themselves (append-only, by
+        convention never mutated) — pinning costs one tuple copy."""
+        with self._lock:
+            return WarehouseView(chunks=tuple(self._chunk_log),
+                                 seq=self.commit_seq, rows=self.rows_loaded)
+
+    def kpi_rollup(self, n_units: int, backend=None,
+                   view: Optional[WarehouseView] = None) -> np.ndarray:
         """Per-equipment KPI sums [n_units, 5] (availability, performance,
-        quality, oee, count) via the compute backend's segmented reduce.
-        Selection: explicit arg > the pipeline's configured backend >
-        env/default."""
+        quality, oee, count) via the compute backend's segmented reduce —
+        the full-rescan reference the serving layer's incremental views
+        are parity-tested against. Selection: explicit arg > the
+        pipeline's configured backend > env/default."""
         from repro.core.backend import get_backend
         be = get_backend(backend or self.backend)
-        return be.segment_reduce(self.fact_table(), n_units)
+        return be.segment_reduce(self.fact_table(view), n_units)
 
-    def fact_table(self) -> np.ndarray:
-        with self._lock:
-            chunks = [c for parts in self._parts.values() for c in parts]
-        if not chunks:
+    def fact_table(self, view: Optional[WarehouseView] = None) -> np.ndarray:
+        if view is None:
+            view = self.read_view()
+        if not view.chunks:
             return np.zeros((0, len(FACT_COLUMNS)), np.float32)
-        return np.concatenate(chunks)
+        return np.concatenate(view.chunks)
 
-    def canonical_fact_table(self) -> np.ndarray:
+    def canonical_fact_table(self, view: Optional[WarehouseView] = None
+                             ) -> np.ndarray:
         """Fact table in a load-order-independent canonical order (full-row
         lexicographic sort). Two runs produced the same warehouse iff their
         canonical tables are byte-identical — the concurrency test's
         equality oracle, immune to thread interleaving of loads."""
-        t = self.fact_table()
+        t = self.fact_table(view)
         if not len(t):
             return t
         return t[np.lexsort(t.T[::-1])]
 
-    def query_oee(self, equipment_id: Optional[int] = None) -> Dict[str, float]:
-        """OLAP aggregate: mean KPI per (optionally one) equipment unit."""
-        t = self.fact_table()
+    def query_oee(self, equipment_id: Optional[int] = None,
+                  view: Optional[WarehouseView] = None) -> Dict[str, float]:
+        """OLAP aggregate: mean KPI per (optionally one) equipment unit.
+        Pass one ``read_view()`` across several calls to make a multi-query
+        report consistent under concurrent loads."""
+        t = self.fact_table(view)
         if equipment_id is not None:
             t = t[t[:, 0].astype(np.int64) == equipment_id]
         if len(t) == 0:

@@ -1,0 +1,55 @@
+"""Shared latency instrumentation: thread-safe sample recording and the
+percentile summary used by both the write path (end-to-end load freshness,
+``repro.runtime.cluster``) and the read path (report staleness,
+``repro.serving.engine``). One definition so the two metrics stay
+comparable — the serving layer's staleness is measured on the same clock
+and aggregated by the same estimator as the pipeline's freshness.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List
+
+import numpy as np
+
+
+def percentiles_ms(samples: np.ndarray) -> Dict[str, float]:
+    """p50/p95/p99 of latency samples given in SECONDS, reported in ms."""
+    if not len(samples):
+        return {"p50_ms": float("nan"), "p95_ms": float("nan"),
+                "p99_ms": float("nan"), "n": 0}
+    p50, p95, p99 = np.percentile(samples, [50, 95, 99])
+    return {"p50_ms": round(float(p50) * 1e3, 3),
+            "p95_ms": round(float(p95) * 1e3, 3),
+            "p99_ms": round(float(p99) * 1e3, 3), "n": int(len(samples))}
+
+
+class LatencyRecorder:
+    """Latency samples appended by one or more hot-path threads and read by
+    a coordinator — a lock guards the chunk list, never the numpy math."""
+
+    def __init__(self):
+        self._chunks: List[np.ndarray] = []
+        self._lock = threading.Lock()
+
+    def add(self, samples: np.ndarray) -> None:
+        if len(samples):
+            with self._lock:
+                self._chunks.append(np.asarray(samples, np.float64))
+
+    def merged(self, drain: bool = False) -> np.ndarray:
+        with self._lock:
+            chunks = self._chunks
+            if drain:
+                self._chunks = []
+            else:
+                chunks = list(chunks)
+        if not chunks:
+            return np.zeros(0, np.float64)
+        return np.concatenate(chunks)
+
+    def percentiles(self, drain: bool = False) -> Dict[str, float]:
+        return percentiles_ms(self.merged(drain))
+
+
+__all__ = ["LatencyRecorder", "percentiles_ms"]

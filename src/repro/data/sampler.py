@@ -148,3 +148,21 @@ class SteelworksSampler:
                                         payload))
                 total += n
         return total
+
+
+def synthetic_facts(rng: np.random.Generator, n: int, n_units: int,
+                    valid_frac: float = 1.0) -> np.ndarray:
+    """Random fact rows in the transformer's output layout
+    (``repro.core.transformer.FACT_COLUMNS``: col 0 unit, 1-2 window,
+    3-6 KPIs, 7-8 on/off segments, 9 valid flag) — the serving-layer
+    tests' and benchmarks' direct-to-warehouse workload, bypassing the
+    pipeline when only the read side is under test."""
+    f = np.zeros((n, 10), np.float32)
+    f[:, 0] = rng.integers(0, n_units, n)
+    f[:, 1] = rng.uniform(0, 60_000, n)
+    f[:, 2] = f[:, 1] + rng.uniform(1, 50, n)
+    f[:, 3:7] = rng.uniform(0, 1, (n, 4))
+    f[:, 7] = rng.uniform(0, 40, n)
+    f[:, 8] = rng.uniform(0, 40, n)
+    f[:, 9] = (rng.random(n) <= valid_frac).astype(np.float32)
+    return f

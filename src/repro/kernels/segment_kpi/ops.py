@@ -4,7 +4,8 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.segment_kpi.segment_kpi import (segment_kpi_kernel,
+from repro.kernels.segment_kpi.segment_kpi import (fold_segments_kernel,
+                                                   segment_kpi_kernel,
                                                    segment_rollup_kernel)
 
 
@@ -36,5 +37,26 @@ def segment_rollup(facts, *, n_units: int = 32, block: int = 256):
     return agg.sum(axis=0)
 
 
-__all__ = ["segment_kpi", "segment_kpi_kernel", "segment_rollup",
-           "segment_rollup_kernel"]
+def fold_segments(packed, *, n_segments: int = 32, block: int = 256):
+    """Serving-layer delta fold of packed rows [N, 1+L] (seg id + value
+    lanes): count/sum/min/max per segment, one fused kernel dispatch.
+    Pads with seg = -1 identity rows; combines the per-block tables."""
+    n, w = packed.shape
+    L = w - 1
+    pad = (-n) % block
+    if pad:
+        padrow = jnp.concatenate(
+            [jnp.full((pad, 1), -1.0, jnp.float32),
+             jnp.zeros((pad, L), jnp.float32)], axis=1)
+        packed = jnp.concatenate([packed, padrow])
+    on_tpu = jax.default_backend() == "tpu"
+    agg = fold_segments_kernel(packed, n_segments=n_segments, block=block,
+                               interpret=not on_tpu)     # [nb, S, 1+3L]
+    return jnp.concatenate(
+        [agg[:, :, :1 + L].sum(axis=0),
+         agg[:, :, 1 + L:1 + 2 * L].min(axis=0),
+         agg[:, :, 1 + 2 * L:].max(axis=0)], axis=-1)
+
+
+__all__ = ["fold_segments", "fold_segments_kernel", "segment_kpi",
+           "segment_kpi_kernel", "segment_rollup", "segment_rollup_kernel"]

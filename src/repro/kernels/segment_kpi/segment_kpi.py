@@ -77,6 +77,65 @@ def _rollup_kernel(facts_ref, agg_ref, *, n_units: int, block: int):
         preferred_element_type=jnp.float32)               # [n_units, 5]
 
 
+def _fold_kernel(packed_ref, out_ref, *, n_segments: int, n_lanes: int,
+                 block: int):
+    """Serving-layer delta fold: per segment, count + sum + min + max of
+    every value lane, fused in one pass over the block.
+
+    ``packed`` rows are [seg_id | lane_0 .. lane_{L-1}] f32 (seg as f32 —
+    exact below 2^24; a negative seg marks a padding row that contributes
+    the identity). count + sums ride the MXU as one one-hot matmul against
+    [1 | lanes]; min/max are masked VPU reductions per lane.
+    """
+    packed = packed_ref[...]                              # [B, 1+L]
+    seg = packed[:, 0].astype(jnp.int32)
+    vals = packed[:, 1:]                                  # [B, L]
+
+    iota = jax.lax.broadcasted_iota(jnp.int32, (block, n_segments), 1)
+    hit = iota == seg[:, None]                            # [B, S] bool
+    onehot = hit.astype(jnp.float32)
+    ones = jnp.ones((block, 1), jnp.float32)
+    cnt_sums = jax.lax.dot_general(                       # [S, 1+L]
+        onehot, jnp.concatenate([ones, vals], axis=-1),
+        (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    mins = []
+    maxs = []
+    for j in range(n_lanes):                              # static lane loop
+        lane = jnp.broadcast_to(vals[:, j:j + 1], (block, n_segments))
+        mins.append(jnp.min(jnp.where(hit, lane, jnp.inf), axis=0))
+        maxs.append(jnp.max(jnp.where(hit, lane, -jnp.inf), axis=0))
+    out_ref[0] = jnp.concatenate(
+        [cnt_sums, jnp.stack(mins, axis=-1), jnp.stack(maxs, axis=-1)],
+        axis=-1)                                          # [S, 1+3L]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("n_segments", "block", "interpret"))
+def fold_segments_kernel(packed: jax.Array, *, n_segments: int = 32,
+                         block: int = 256, interpret: bool = True):
+    """packed [N, 1+L] f32 (seg id lane + L value lanes), N % block == 0.
+    Returns [blocks, n_segments, 1+3L]: per-block packed fold tables —
+    caller combines across blocks (count/sum add, min min, max max)."""
+    n, w = packed.shape
+    n_lanes = w - 1
+    assert n % block == 0
+    nb = n // block
+    width = 1 + 3 * n_lanes
+    kernel = functools.partial(_fold_kernel, n_segments=n_segments,
+                               n_lanes=n_lanes, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((block, w), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((1, n_segments, width),
+                                lambda i: (i, 0, 0))],
+        out_shape=[jax.ShapeDtypeStruct((nb, n_segments, width),
+                                        jnp.float32)],
+        interpret=interpret,
+    )(packed)[0]
+
+
 @functools.partial(jax.jit, static_argnames=("n_units", "block", "interpret"))
 def segment_rollup_kernel(facts: jax.Array, *, n_units: int = 32,
                           block: int = 256, interpret: bool = True):

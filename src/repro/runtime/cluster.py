@@ -39,6 +39,7 @@ import numpy as np
 
 from repro.configs.dod_etl import ETLConfig
 from repro.core.cdc import ChangeLog, SourceDatabase
+from repro.core.metrics import LatencyRecorder, percentiles_ms
 from repro.core.pipeline import DODETLPipeline, StreamProcessorWorker
 from repro.core.records import RecordBatch
 
@@ -134,40 +135,9 @@ class SimulatedCluster:
 # ===================================================================== real
 # concurrency below: the genuinely parallel runtime (ConcurrentCluster)
 
-def _percentiles_ms(samples: np.ndarray) -> Dict[str, float]:
-    if not len(samples):
-        return {"p50_ms": float("nan"), "p95_ms": float("nan"),
-                "p99_ms": float("nan"), "n": 0}
-    p50, p95, p99 = np.percentile(samples, [50, 95, 99])
-    return {"p50_ms": round(float(p50) * 1e3, 3),
-            "p95_ms": round(float(p95) * 1e3, 3),
-            "p99_ms": round(float(p99) * 1e3, 3), "n": int(len(samples))}
-
-
-class LatencyRecorder:
-    """Per-worker freshness samples (seconds between CDC append event time
-    and warehouse load). Appended by the worker's load stage; read by the
-    coordinator — a lock guards the chunk list, never the numpy math."""
-
-    def __init__(self):
-        self._chunks: List[np.ndarray] = []
-        self._lock = threading.Lock()
-
-    def add(self, samples: np.ndarray) -> None:
-        if len(samples):
-            with self._lock:
-                self._chunks.append(np.asarray(samples, np.float64))
-
-    def merged(self, drain: bool = False) -> np.ndarray:
-        with self._lock:
-            chunks = self._chunks
-            if drain:
-                self._chunks = []
-            else:
-                chunks = list(chunks)
-        if not chunks:
-            return np.zeros(0, np.float64)
-        return np.concatenate(chunks)
+# shared with the serving layer so freshness and report staleness are the
+# same estimator on the same clock (repro.core.metrics)
+_percentiles_ms = percentiles_ms
 
 
 @dataclasses.dataclass
@@ -391,10 +361,13 @@ class WorkerRuntime:
         good = facts[found]
         if not len(good):
             return 0
-        w.warehouse.load_partitioned(good, self.pipe.cfg.n_partitions)
-        done_lsns = batch.lsn[found]
         log = self.pipe.source.log
-        self.latency.add(log.clock() - log.event_times(done_lsns))
+        ev = log.event_times(batch.lsn[found])
+        # event times ride into the warehouse so an attached serving layer
+        # can stamp per-record report staleness on the same CDC clock
+        w.warehouse.load_partitioned(good, self.pipe.cfg.n_partitions,
+                                     event_times=ev)
+        self.latency.add(log.clock() - ev)
         self.records_done += len(good)
         return len(good)
 
@@ -465,10 +438,17 @@ class ConcurrentCluster:
 
     def __init__(self, pipe: DODETLPipeline, *,
                  max_records_per_partition: Optional[int] = None,
-                 poll_cdc: bool = True):
+                 poll_cdc: bool = True, serving=None):
         self.pipe = pipe
         self.cap = max_records_per_partition
         self.poll_cdc = poll_cdc
+        # optional BI serving stage: a MaterializedViewEngine (or a
+        # ReportServer wrapping one) whose maintenance thread runs with the
+        # cluster; worker load stages publish fact deltas to it via the
+        # warehouse hook, and cluster reports include its epoch/staleness
+        self.serving = getattr(serving, "engine", serving)
+        if self.serving is not None:
+            pipe.warehouse.attach_serving(self.serving)
         self.runtimes: Dict[str, WorkerRuntime] = {
             w.name: WorkerRuntime(w, pipe, max_records_per_partition)
             for w in pipe.workers}
@@ -482,6 +462,8 @@ class ConcurrentCluster:
     # --------------------------------------------------------------- lifecycle
     def start(self) -> None:
         self._t_start = time.perf_counter()
+        if self.serving is not None:
+            self.serving.start()         # view-maintenance stage
         for rt in self.runtimes.values():
             rt.start()
         if self.poll_cdc:
@@ -505,6 +487,8 @@ class ConcurrentCluster:
             self._extract_thread = None
         for rt in self.runtimes.values():
             rt.join()
+        if self.serving is not None:
+            self.serving.stop()          # folds the remaining delta backlog
 
     # ---------------------------------------------------------------- metrics
     def alive_workers(self) -> List[str]:
@@ -526,6 +510,8 @@ class ConcurrentCluster:
                "n_workers": len(self.alive_workers()),
                "redump_s": round(self.redump_s_total, 4)}
         out.update(self.freshness())
+        if self.serving is not None:
+            out["serving"] = self.serving.report()
         return out
 
     # ------------------------------------------------------------ idle waiting

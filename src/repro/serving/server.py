@@ -1,0 +1,143 @@
+"""Near-real-time report API over the materialized-view engine.
+
+``ReportServer`` is what a BI dashboard talks to: every query is served
+from a pinned ``EpochSnapshot`` — O(n_segments) reads of precomputed
+aggregate tables, no fact-table scan, no locking against the loading
+cluster — and every response carries its epoch and a staleness stamp
+(how old the answer's data is, on the CDC event-time clock).
+
+Use ``server.snapshot()`` to pin ONE epoch across several queries (a
+multi-query report is then internally consistent: every number comes from
+the same point of the delta stream); the convenience methods pin a fresh
+epoch per call.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.serving.engine import (EpochSnapshot, MaterializedViewEngine,
+                                  serving_clock)
+
+
+@dataclasses.dataclass(frozen=True)
+class Report:
+    """One query response: data + provenance (epoch, staleness)."""
+
+    view: str
+    epoch: int
+    staleness_ms: float                      # age of the data served
+    rows: int                                # fact rows folded into the
+    data: dict                               # epoch (incl. invalid-flagged
+                                             # rows dropped from view state)
+
+
+class ReportSnapshot:
+    """Query helpers bound to ONE pinned epoch (snapshot isolation: the
+    answers cannot change, tear, or block while you hold this)."""
+
+    def __init__(self, snap: EpochSnapshot):
+        self.snap = snap
+
+    @property
+    def epoch(self) -> int:
+        return self.snap.epoch
+
+    def _report(self, view: str, data: dict) -> Report:
+        return Report(view=view, epoch=self.snap.epoch,
+                      staleness_ms=self.snap.staleness_ms(),
+                      rows=self.snap.rows_folded, data=data)
+
+    # ------------------------------------------------------- standard reports
+    def query(self, view: str) -> Report:
+        """Generic per-segment report: count / sum / mean / min / max for
+        every lane of ``view``."""
+        st = self.snap.view(view)
+        means = st.means()
+        data = {"count": st.count.copy(), "lanes": st.spec.lanes,
+                "sum": st.sums.copy(), "mean": means,
+                "min": st.mins.copy(), "max": st.maxs.copy()}
+        return self._report(view, data)
+
+    def kpi_rollup(self) -> np.ndarray:
+        """[n_units, 5] KPI sums + count — the exact shape and semantics of
+        ``Warehouse.kpi_rollup``, served from the view state in O(n_units)."""
+        st = self.snap.view("oee_by_equipment")
+        return np.concatenate([st.sums, st.count[:, None]],
+                              axis=1).astype(np.float32)
+
+    def oee(self, equipment_id: Optional[int] = None) -> Report:
+        """``Warehouse.query_oee`` served incrementally: mean KPIs for one
+        unit, or across all units when ``equipment_id`` is None."""
+        st = self.snap.view("oee_by_equipment")
+        if equipment_id is not None:
+            cnt = float(st.count[equipment_id])
+            means = (st.sums[equipment_id] / cnt if cnt
+                     else np.full(st.spec.n_lanes, np.nan))
+        else:
+            cnt = float(st.count.sum())
+            means = (st.sums.sum(axis=0) / cnt if cnt
+                     else np.full(st.spec.n_lanes, np.nan))
+        data = dict(zip(st.spec.lanes, (float(m) for m in means)))
+        data["rows"] = cnt
+        return self._report("oee_by_equipment", data)
+
+    def top_downtime(self, k: int = 5) -> Report:
+        """Top-k downtime causes: units ranked by summed off-segment
+        seconds (ties broken by unit id for determinism)."""
+        st = self.snap.view("downtime_by_equipment")
+        down = st.sums[:, 0]
+        order = np.lexsort((np.arange(len(down)), -down))[:k]
+        data = {"unit": order.astype(np.int64),
+                "downtime_s": down[order].astype(np.float64),
+                "uptime_s": st.sums[order, 1].astype(np.float64)}
+        return self._report("downtime_by_equipment", data)
+
+    def production_rate(self) -> Report:
+        """Per-window production report: facts/window, summed runtime and
+        the window's min/max OEE."""
+        st = self.snap.view("production_rate_windows")
+        data = {"facts": st.count.copy(),
+                "runtime_s": st.sums[:, 0].copy(),
+                "oee_min": st.mins[:, 1].copy(),
+                "oee_max": st.maxs[:, 1].copy()}
+        return self._report("production_rate_windows", data)
+
+    def shift_report(self) -> Report:
+        """Per (unit, shift) mean KPIs — the paper's shift report."""
+        st = self.snap.view("kpi_by_unit_shift")
+        return self._report("kpi_by_unit_shift",
+                            {"count": st.count.copy(), "mean": st.means(),
+                             "lanes": st.spec.lanes})
+
+
+class ReportServer:
+    """The BI front door: pins an epoch per query (or hands out pinned
+    ``ReportSnapshot``s for multi-query consistency)."""
+
+    def __init__(self, engine: MaterializedViewEngine):
+        self.engine = engine
+
+    def snapshot(self) -> ReportSnapshot:
+        return ReportSnapshot(self.engine.snapshot())
+
+    # per-call conveniences (each pins a fresh epoch)
+    def query(self, view: str) -> Report:
+        return self.snapshot().query(view)
+
+    def kpi_rollup(self) -> np.ndarray:
+        return self.snapshot().kpi_rollup()
+
+    def oee(self, equipment_id: Optional[int] = None) -> Report:
+        return self.snapshot().oee(equipment_id)
+
+    def top_downtime(self, k: int = 5) -> Report:
+        return self.snapshot().top_downtime(k)
+
+    def production_rate(self) -> Report:
+        return self.snapshot().production_rate()
+
+
+__all__ = ["Report", "ReportSnapshot", "ReportServer"]

@@ -108,12 +108,8 @@ def test_param_counts_in_expected_range():
     """Full configs hit the published parameter-count ballpark."""
     expect = {
         "internlm2-1.8b": (1.5e9, 2.3e9),
-        "granite-20b": (18e9, 29e9),   # SwiGLU (assignment: llama-arch) vs 2-matrix GELU of GPT-BigCode
-        "starcoder2-7b": (6e9, 10.5e9),  # same SwiGLU delta
-        "deepseek-coder-33b": (30e9, 36e9),
         "qwen2-vl-7b": (6.5e9, 9e9),
         "rwkv6-7b": (6e9, 9e9),
-        "phi3.5-moe-42b-a6.6b": (38e9, 45e9),
         "qwen2-moe-a2.7b": (12e9, 16e9),
         "zamba2-1.2b": (0.9e9, 1.6e9),
         "whisper-small": (0.2e9, 0.3e9),

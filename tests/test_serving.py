@@ -1,0 +1,360 @@
+"""BI serving layer tests: fused fold op parity, byte-identical
+incremental-vs-recompute equivalence, snapshot isolation under concurrent
+writers, epoch monotonicity across failover, and the warehouse
+committed-view regression (readers never observe a partition mid-load)."""
+import dataclasses
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.configs.dod_etl import steelworks_config
+from repro.core import DODETLPipeline, SourceDatabase, StarSchemaWarehouse
+from repro.core.backend import empty_fold_state, fold_width, get_backend
+from repro.data.sampler import (SamplerConfig, SteelworksSampler,
+                                synthetic_facts)
+from repro.runtime.cluster import ConcurrentCluster
+from repro.serving import (MaterializedViewEngine, ReportServer,
+                           downtime_by_equipment, oee_by_equipment,
+                           production_rate_windows, steelworks_views)
+
+N_UNITS = 8
+
+
+def rand_facts(rng, n, n_units=N_UNITS):
+    return synthetic_facts(rng, n, n_units, valid_frac=0.85)
+
+
+def build_cluster(n_workers, n_records, n_partitions=N_UNITS, serving=None):
+    cfg = steelworks_config(n_partitions=n_partitions, backend="numpy")
+    cfg = dataclasses.replace(cfg, buffer_capacity=4096)
+    src = SourceDatabase()
+    sampler = SteelworksSampler(cfg, SamplerConfig(
+        records_per_table=n_records, n_equipment=n_partitions))
+    pipe = DODETLPipeline(cfg, src, n_workers=n_workers)
+    cluster = ConcurrentCluster(pipe, serving=serving)
+    return src, sampler, pipe, cluster
+
+
+# ------------------------------------------------------------ fold op contract
+def test_fold_segments_matches_per_segment_oracle():
+    rng = np.random.default_rng(0)
+    n, S, L = 777, 11, 3
+    seg = rng.integers(-2, S + 2, n)         # includes out-of-range ids
+    vals = rng.normal(scale=5, size=(n, L)).astype(np.float32)
+    packed = get_backend("numpy").fold_segments(seg, vals, S)
+    assert packed.shape == (S, fold_width(L))
+    for s in range(S):
+        m = (seg == s)
+        assert packed[s, 0] == m.sum()                    # count exact
+        if m.any():
+            np.testing.assert_allclose(packed[s, 1:1 + L], vals[m].sum(0),
+                                       rtol=1e-4, atol=1e-4)
+            np.testing.assert_array_equal(packed[s, 1 + L:1 + 2 * L],
+                                          vals[m].min(0))   # min/max exact
+            np.testing.assert_array_equal(packed[s, 1 + 2 * L:],
+                                          vals[m].max(0))
+        else:   # empty segment carries the fold identity
+            assert (packed[s, 1 + L:1 + 2 * L] == np.inf).all()
+            assert (packed[s, 1 + 2 * L:] == -np.inf).all()
+
+
+def test_fold_segments_backend_parity():
+    """numpy and jax fold the SAME halving tree -> bitwise identical;
+    pallas uses the MXU one-hot matmul -> allclose (same contract as the
+    other kernel ops)."""
+    rng = np.random.default_rng(1)
+    for n in (1, 9, 256, 5000):
+        S, L = 13, 4
+        seg = rng.integers(-1, S + 1, n)
+        vals = rng.normal(scale=3, size=(n, L)).astype(np.float32)
+        ref = get_backend("numpy").fold_segments(seg, vals, S)
+        jx = get_backend("jax").fold_segments(seg, vals, S)
+        assert ref.tobytes() == jx.tobytes()
+        pl = get_backend("pallas").fold_segments(seg, vals, S)
+        finite = np.isfinite(ref)
+        np.testing.assert_array_equal(finite, np.isfinite(pl))
+        np.testing.assert_allclose(pl[finite], ref[finite],
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_empty_fold_state_is_identity():
+    from repro.core.backend import combine_fold
+    rng = np.random.default_rng(2)
+    seg = rng.integers(0, 5, 100)
+    vals = rng.normal(size=(100, 2)).astype(np.float32)
+    agg = get_backend("numpy").fold_segments(seg, vals, 5)
+    out = combine_fold(empty_fold_state(5, 2), agg)
+    assert out.tobytes() == agg.tobytes()
+
+
+# -------------------------------------------------- incremental == recompute
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_incremental_equals_rebuild_byte_identical(backend):
+    """The equivalence property: view state after N random delta folds ==
+    replaying the same chunk log from scratch, BYTE-identical — and the
+    numpy and jax engines agree bitwise too."""
+    rng = np.random.default_rng(3)
+    specs = steelworks_views(N_UNITS)
+    eng = MaterializedViewEngine(specs, backend=backend)
+    deltas = [rand_facts(rng, int(n))
+              for n in rng.integers(1, 900, 25)] + [rand_facts(rng, 1)]
+    for d in deltas:
+        eng.publish(d)
+        if rng.random() < 0.5:         # fold in random batch sizes
+            eng.fold_pending()
+    eng.fold_pending()
+    snap = eng.snapshot()
+    assert snap.rows_folded == sum(len(d) for d in deltas)
+
+    rebuilt = MaterializedViewEngine.rebuild(specs, deltas, backend=backend)
+    for name, st in snap.states.items():
+        assert st.table.tobytes() == rebuilt.states[name].table.tobytes()
+
+    ref = MaterializedViewEngine.rebuild(specs, deltas, backend="numpy")
+    for name, st in snap.states.items():
+        assert st.table.tobytes() == ref.states[name].table.tobytes()
+
+
+def test_view_queries_match_full_rescan():
+    """Acceptance parity: incremental kpi_rollup / query_oee answers are
+    numerically identical to the warehouse's full-rescan path (counts
+    exact, means to float tolerance)."""
+    cfg = steelworks_config(n_partitions=N_UNITS, backend="numpy")
+    src = SourceDatabase()
+    SteelworksSampler(cfg, SamplerConfig(
+        records_per_table=2000, n_equipment=N_UNITS)).generate(src)
+    pipe = DODETLPipeline(cfg, src, n_workers=2)
+    engine = pipe.warehouse.attach_serving(
+        MaterializedViewEngine(steelworks_views(N_UNITS), backend="numpy"))
+    pipe.extract()
+    pipe.bootstrap_caches()
+    pipe.run_to_completion()
+    engine.fold_pending()
+    server = ReportServer(engine)
+
+    view_roll = server.kpi_rollup()
+    scan_roll = pipe.warehouse.kpi_rollup(N_UNITS, backend="numpy")
+    np.testing.assert_array_equal(view_roll[:, 4], scan_roll[:, 4])
+    np.testing.assert_allclose(view_roll, scan_roll, rtol=1e-4, atol=1e-4)
+
+    for unit in list(range(N_UNITS)) + [None]:
+        r = server.oee(unit)
+        q = pipe.warehouse.query_oee(unit)
+        assert r.data["rows"] == q["rows"]
+        for k in ("availability", "performance", "quality", "oee"):
+            np.testing.assert_allclose(r.data[k], q[k], rtol=1e-4)
+
+
+def test_attach_serving_replays_history():
+    """Views attached AFTER loads cover the committed history too."""
+    rng = np.random.default_rng(4)
+    wh = StarSchemaWarehouse()
+    for _ in range(5):
+        wh.load_partitioned(rand_facts(rng, 200), N_UNITS)
+    engine = wh.attach_serving(
+        MaterializedViewEngine([oee_by_equipment(N_UNITS)],
+                               backend="numpy"))
+    wh.load_partitioned(rand_facts(rng, 100), N_UNITS)
+    engine.fold_pending()
+    snap = engine.snapshot()
+    t = wh.fact_table()
+    valid = t[:, 9] > 0.5
+    assert snap.view("oee_by_equipment").count.sum() == valid.sum()
+
+
+# ------------------------------------------------------------ isolation/epochs
+def test_snapshot_isolation_under_concurrent_writer():
+    """Readers pin epochs while a writer thread keeps folding: pinned
+    state never changes (isolation), epochs only grow (monotonicity),
+    published tables are frozen."""
+    rng = np.random.default_rng(5)
+    engine = MaterializedViewEngine(steelworks_views(N_UNITS),
+                                    backend="numpy")
+    engine.start()
+    stop = threading.Event()
+
+    def writer():
+        wrng = np.random.default_rng(6)
+        while not stop.is_set():
+            engine.publish(rand_facts(wrng, 64))
+            time.sleep(0.001)
+
+    t = threading.Thread(target=writer)
+    t.start()
+    try:
+        pinned, last_epoch = [], -1
+        deadline = time.time() + 5.0
+        while len(pinned) < 8 and time.time() < deadline:
+            snap = engine.snapshot()
+            assert snap.epoch >= last_epoch
+            last_epoch = snap.epoch
+            if snap.epoch > (pinned[-1][0].epoch if pinned else -1):
+                pinned.append((snap, {n: s.table.tobytes()
+                                      for n, s in snap.states.items()}))
+            time.sleep(0.01)
+        assert len(pinned) >= 3          # the writer made progress
+    finally:
+        stop.set()
+        t.join()
+        engine.stop()
+    for snap, frozen in pinned:          # pinned epochs never moved
+        for name, st in snap.states.items():
+            assert not st.table.flags.writeable
+            assert st.table.tobytes() == frozen[name]
+    counts = [s.view("oee_by_equipment").count.sum() for s, _ in pinned]
+    assert all(b >= a for a, b in zip(counts, counts[1:]))
+
+
+def test_live_cluster_queries_consistent_epochs():
+    """Queries issued while ConcurrentCluster workers load: every pinned
+    snapshot is internally consistent (all views cover the same delta
+    prefix — equal valid-row counts), epochs are monotonic, and the final
+    state byte-matches the recompute oracle."""
+    n = 3000
+    engine = MaterializedViewEngine(steelworks_views(N_UNITS),
+                                    backend="numpy")
+    server = ReportServer(engine)
+    src, sampler, pipe, cluster = build_cluster(3, n, serving=engine)
+    cluster.start()
+    feeder = threading.Thread(target=lambda: sampler.generate(src))
+    feeder.start()
+    last_epoch = -1
+    for _ in range(40):
+        snap = server.snapshot()
+        assert snap.epoch >= last_epoch
+        last_epoch = snap.epoch
+        per_view = {name: st.count.sum()
+                    for name, st in snap.snap.states.items()}
+        assert len(set(per_view.values())) == 1, f"torn epoch: {per_view}"
+        time.sleep(0.005)
+    feeder.join()
+    done = cluster.run_until_idle(timeout=90)
+    rep = cluster.report()
+    cluster.stop_all()
+    assert done == n
+
+    snap = engine.snapshot()
+    assert snap.rows_folded == n
+    rebuilt = MaterializedViewEngine.rebuild(
+        steelworks_views(N_UNITS), pipe.warehouse.read_view().chunks,
+        backend="numpy")
+    for name, st in snap.states.items():
+        assert st.table.tobytes() == rebuilt.states[name].table.tobytes()
+    # staleness recorded per record, on the same clock as load freshness
+    assert rep["serving"]["staleness_n"] == n
+    assert rep["serving"]["staleness_p50_ms"] > 0
+    assert (rep["serving"]["staleness_p50_ms"]
+            <= rep["serving"]["staleness_p95_ms"])
+    # visibility always lags the load that produced it
+    assert rep["serving"]["staleness_p95_ms"] >= rep["p50_ms"]
+
+
+def test_epoch_monotonic_across_failover():
+    """§4.1.3 drill with the serving stage attached: killing workers
+    mid-run never regresses the epoch, and the post-failover state still
+    byte-matches the recompute oracle (no lost or doubled deltas)."""
+    n = 4000
+    engine = MaterializedViewEngine(steelworks_views(N_UNITS),
+                                    backend="numpy")
+    src, sampler, pipe, cluster = build_cluster(4, n, n_partitions=8,
+                                                serving=engine)
+    cluster.start()
+    feeder = threading.Thread(target=lambda: sampler.generate(src))
+    feeder.start()
+    epochs = [engine.snapshot().epoch]
+    time.sleep(0.15)
+    cluster.fail_workers(["w1", "w2"])
+    epochs.append(engine.snapshot().epoch)
+    feeder.join()
+    done = cluster.run_until_idle(timeout=90)
+    epochs.append(engine.snapshot().epoch)
+    cluster.stop_all()
+    epochs.append(engine.snapshot().epoch)
+    assert done == n
+    assert epochs == sorted(epochs)
+    snap = engine.snapshot()
+    assert snap.rows_folded == n
+    rebuilt = MaterializedViewEngine.rebuild(
+        steelworks_views(N_UNITS), pipe.warehouse.read_view().chunks,
+        backend="numpy")
+    for name, st in snap.states.items():
+        assert st.table.tobytes() == rebuilt.states[name].table.tobytes()
+
+
+# ------------------------------------------------------------- view semantics
+def test_topn_downtime_and_window_reports():
+    facts = np.zeros((6, 10), np.float32)
+    facts[:, 0] = [0, 0, 1, 2, 2, 2]
+    facts[:, 1] = [0, 100, 2100, 4100, 4200, 100]
+    facts[:, 6] = [.5, .7, .2, .9, .4, .6]      # oee
+    facts[:, 7] = [1, 1, 2, 3, 3, 3]            # uptime
+    facts[:, 8] = [5, 5, 30, 1, 1, 1]           # downtime
+    facts[:, 9] = 1.0
+    facts[5, 9] = 0.0                           # invalid: must be ignored
+    engine = MaterializedViewEngine(
+        [downtime_by_equipment(3), production_rate_windows(
+            n_windows=4, window_len=2000.0)], backend="numpy")
+    engine.publish(facts)
+    engine.fold_pending()
+    server = ReportServer(engine)
+
+    top = server.top_downtime(2)
+    np.testing.assert_array_equal(top.data["unit"], [1, 0])
+    np.testing.assert_allclose(top.data["downtime_s"], [30.0, 10.0])
+    assert top.epoch == 1
+
+    rate = server.production_rate()
+    np.testing.assert_array_equal(rate.data["facts"], [2, 1, 2, 0])
+    np.testing.assert_allclose(rate.data["oee_min"][0], 0.5)
+    np.testing.assert_allclose(rate.data["oee_max"][0], 0.7)
+    np.testing.assert_allclose(rate.data["oee_min"][2], 0.4)
+    assert np.isinf(rate.data["oee_min"][3])    # empty window: identity
+
+
+# ----------------------------------------- warehouse committed-view regression
+def test_warehouse_read_view_consistent_under_concurrent_loads():
+    """Regression for the ad-hoc read/write race: a pinned ``read_view``
+    is immune to concurrent ``load_partitioned`` calls — every aggregate
+    computed from one view is stable and mutually consistent, and
+    successive views only grow."""
+    wh = StarSchemaWarehouse()
+    stop = threading.Event()
+
+    def writer():
+        wrng = np.random.default_rng(7)
+        while not stop.is_set():
+            wh.load_partitioned(rand_facts(wrng, 128), N_UNITS)
+            time.sleep(0.001)            # keep the fact table test-sized
+
+    t = threading.Thread(target=writer)
+    t.start()
+    try:
+        prev_rows = -1
+        checked = 0
+        deadline = time.time() + 10.0
+        while checked < 10 and time.time() < deadline:
+            view = wh.read_view()
+            assert view.rows >= prev_rows
+            prev_rows = view.rows
+            if not view.rows:
+                continue
+            t1 = wh.fact_table(view)
+            roll1 = wh.kpi_rollup(N_UNITS, backend="numpy", view=view)
+            time.sleep(0.002)            # let loads land in between
+            t2 = wh.fact_table(view)
+            roll2 = wh.kpi_rollup(N_UNITS, backend="numpy", view=view)
+            assert len(t1) == view.rows
+            assert t1.tobytes() == t2.tobytes()
+            assert roll1.tobytes() == roll2.tobytes()
+            # a multi-query report over ONE view is internally consistent
+            rows = sum(wh.query_oee(u, view=view)["rows"]
+                       for u in range(N_UNITS)
+                       if wh.query_oee(u, view=view)["rows"] > 0)
+            assert rows == view.rows
+            checked += 1
+    finally:
+        stop.set()
+        t.join()
+    assert checked >= 10
