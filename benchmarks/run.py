@@ -51,6 +51,12 @@ def main() -> None:
     from benchmarks import report_serving as RS
     emit("serving", RS.summary(quick=args.quick))
 
+    # device-plane dispatch/sync overhead: host<->device round trips per
+    # worker step + segment-compacted fold speedup (full sweep:
+    # python -m benchmarks.dispatch_overhead -> BENCH_dispatch.json)
+    from benchmarks import dispatch_overhead as DO
+    emit("dispatch", DO.summary(quick=args.quick))
+
     # roofline summary (if the dry-run matrix has been produced)
     try:
         from benchmarks.roofline import load_cells, roofline_fraction

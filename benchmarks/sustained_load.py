@@ -123,26 +123,37 @@ def feed_waves(sampler: SteelworksSampler, src: SourceDatabase,
 
 
 def prewarm(pipe: DODETLPipeline, wl: Workload) -> None:
-    """Compile every transform bucket a run can hit, outside the window.
-    The micro-batch cap bounds any single dispatch (fetch OR retry sweep)
-    to cap * n_partitions records, so the bucket set is small and identical
+    """Compile every transform bucket a run can hit, outside the window —
+    BOTH kernel variants: the plain transform (legacy/pre-PR arms) and the
+    fused transform+rollup the device-resident hot path dispatches. The
+    micro-batch cap bounds any single dispatch (fetch OR retry sweep) to
+    cap * n_partitions records, so the bucket set is small and identical
     for every worker count — no mid-measurement jit compiles."""
     be = pipe.backend
     if not be.device:
         return
     w = pipe.workers[0]
+    n_units = pipe.cfg.n_business_keys
     size = 256 if be.name == "pallas" else 128
     top = 1 << (2 * wl.dispatch - 1).bit_length()
     while size <= top:
         dummy = np.full((size, 8), -1.0, np.float32)
         be.transform(dummy, w.equipment, w.quality, join_depth=wl.join_depth)
+        be.transform_and_rollup(dummy, w.equipment, w.quality,
+                                n_units=n_units,
+                                join_depth=wl.join_depth).to_host()
         size *= 2
 
 
 # ----------------------------------------------------------------- harnesses
-def _drive_sequential(wl: Workload, step) -> Dict:
+def _drive_sequential(wl: Workload, step, fused_rollup: bool = True) -> Dict:
     cfg, src, sampler = seed_source(wl)
     pipe = DODETLPipeline(cfg, src, n_workers=1, join_depth=wl.join_depth)
+    if not fused_rollup:
+        # faithful seed dispatch: no fused rollup riding the transform
+        # kernel (the seed arm must not pay post-PR per-dispatch work)
+        for w in pipe.workers:
+            w.transformer.n_units = None
     prewarm(pipe, wl)
     feeder = threading.Thread(target=feed_waves, args=(sampler, src, wl))
     total, stalls = 0, 0
@@ -183,7 +194,7 @@ def run_seed_sequential(wl: Workload) -> Dict:
                     done += len(facts)
         return done
 
-    return _drive_sequential(wl, step)
+    return _drive_sequential(wl, step, fused_rollup=False)
 
 
 def run_sequential(wl: Workload) -> Dict:

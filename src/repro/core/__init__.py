@@ -8,6 +8,7 @@ wired by pipeline; baseline is the unmodified-framework comparison point.
 from repro.core.records import RecordBatch, make_batch, PAYLOAD_WIDTH  # noqa: F401
 from repro.core.backend import (  # noqa: F401
     ComputeBackend,
+    FactBlock,
     available_backends,
     get_backend,
     register_backend,

@@ -6,16 +6,25 @@ against the ``ComputeBackend`` protocol:
 
   * ``hash_probe``     — open-addressing probe of the in-memory master cache
                          (the streaming join of §3.1.2),
-  * ``transform``      — the fused fact-grain transform: both cache probes +
+  * ``transform_block``— the fused fact-grain transform: both cache probes +
                          interval intersection (Fig. 3) + OEE KPI math (§4),
+                         returning a device-resident ``FactBlock`` (and,
+                         with ``n_units``, the per-unit KPI rollup in the
+                         SAME dispatch — ``transform_and_rollup``),
+  * ``transform``      — host-convenience wrapper: ``transform_block`` +
+                         an immediate ``FactBlock.to_host()``,
   * ``segment_reduce`` — per-equipment KPI rollup of a fact block (the OLAP
-                         aggregate the Target Database Updater feeds),
+                         aggregate the Target Database Updater feeds; the
+                         hot path gets this fused into the transform
+                         dispatch via ``transform_and_rollup``),
   * ``fold_segments``  — the serving layer's incremental-view delta fold:
                          fused multi-statistic segmented aggregate
                          (count + sum + min + max per segment per value
-                         lane) of one fact delta, in ONE dispatch
-                         (``repro.serving.engine`` folds these into
-                         materialized report views).
+                         lane) of one fact delta, in ONE dispatch per
+                         block, segment-COMPACTED: the tree folds only the
+                         delta's live segments and scatters into the
+                         packed table (``repro.serving.engine`` folds
+                         these into materialized report views).
 
 Three registered implementations:
 
@@ -28,9 +37,18 @@ Selection order: explicit name > ``ETLConfig.backend`` > the
 ``DODETL_BACKEND`` environment variable > ``"jax"``. A fourth backend is a
 subclass + ``@register_backend("name")`` — see ARCHITECTURE.md.
 
-All protocol boundaries are host numpy arrays; device residency is an
-implementation detail of each backend (the jax/pallas backends mirror the
-cache to device lazily via ``InMemoryTable.device_state``).
+Protocol boundaries: inputs are host numpy arrays; ``transform_block``
+returns an opaque ``FactBlock`` that stays device-resident (no blocking
+``np.asarray`` sync) until ``to_host()`` is called at the warehouse-load
+boundary, so XLA's async dispatch overlaps device compute with the load
+stage's host work. The jax/pallas backends mirror the cache to device
+lazily via ``InMemoryTable.device_state`` (component-dirty tracked, so
+steady-state snapshots re-upload nothing).
+
+Instrumentation: every backend instance counts ``op_dispatches`` (device
+dispatch groups issued) and ``host_syncs`` (blocking device→host
+materializations). The counters are advisory/single-threaded — the
+dispatch-overhead benchmark and the tier-1 dispatch-count tests read them.
 """
 from __future__ import annotations
 
@@ -114,27 +132,145 @@ def _fold_tree_np(seg: np.ndarray, vals: np.ndarray,
 
 def _fold_blocks(seg: np.ndarray, vals: np.ndarray, n_segments: int,
                  tree) -> np.ndarray:
-    """Shared delta driver: chunk the delta into <= FOLD_BLOCK row blocks,
-    pad each to a power of two with seg = -1 identity rows, fold each block
-    through ``tree`` and chain the partials in block order (host combine).
-    Block boundaries depend only on the delta length, so replaying the same
-    delta sequence reproduces the same op order bit-for-bit."""
+    """Shared delta driver, SEGMENT-COMPACTED: ``np.unique`` the delta's
+    live segment ids, remap them to a dense [0, n_active) range, fold the
+    halving tree over ``[block, n_active, lanes]`` instead of
+    ``[block, n_segments, lanes]``, then scatter the folded columns back
+    into the packed ``[n_segments, W]`` table. A delta touching 2 of 2048
+    segments folds a 2-wide tree, not a 2048-wide one.
+
+    Bitwise contract unchanged: the tree is elementwise per segment column
+    (a segment's fold never reads another segment's lanes), so dropping
+    inactive columns and scattering afterwards reproduces the uncompacted
+    tree's per-segment op order EXACTLY — the numpy==jax bitwise
+    determinism and ``rebuild()`` byte-identity properties survive
+    (asserted against an uncompacted reference in tests/test_serving.py).
+
+    Chunking as before: <= FOLD_BLOCK row blocks, each padded to a power of
+    two with seg = -1 identity rows, partials chained in block order (host
+    combine). The active-column count is padded to a power of two (>= 8,
+    capped at n_segments) so jitted trees compile once per
+    (rows, columns) bucket, not once per distinct delta sparsity."""
     seg = np.asarray(seg, np.int64)
     vals = np.asarray(vals, np.float32)
     if vals.ndim == 1:
         vals = vals[:, None]
     n, L = vals.shape
     out = empty_fold_state(n_segments, L)
+    if n == 0:
+        return out
+    in_range = (seg >= 0) & (seg < n_segments)
+    live = np.unique(seg[in_range])
+    n_active = len(live)
+    if n_active == 0:
+        return out                       # nothing but identity rows
+    n_fold = min(n_segments, max(8, 1 << (n_active - 1).bit_length()))
+    # rows outside [0, n_segments) become -1 (identity), live ids become
+    # their rank in the sorted live array — the compact column index.
+    # Dense deltas (every segment live) skip the remap: rank == id.
+    if n_active == n_segments:
+        cseg = seg if in_range.all() else np.where(in_range, seg, -1)
+    else:
+        cseg = np.where(in_range, np.searchsorted(live, seg), -1)
+    acc = empty_fold_state(n_fold, L)
     for lo in range(0, n, FOLD_BLOCK):
-        s = seg[lo:lo + FOLD_BLOCK]
+        s = cseg[lo:lo + FOLD_BLOCK]
         v = vals[lo:lo + FOLD_BLOCK]
         m = len(s)
         bucket = max(8, 1 << (m - 1).bit_length())
         if bucket != m:
             s = np.concatenate([s, np.full(bucket - m, -1, np.int64)])
             v = np.concatenate([v, np.zeros((bucket - m, L), np.float32)])
-        out = combine_fold(out, tree(s, v, n_segments))
+        acc = combine_fold(acc, tree(s, v, n_fold))
+    out[live] = acc[:n_active]           # scatter into the packed table
     return out
+
+
+class FactBlock:
+    """Opaque handle to ONE transform dispatch's results — the unit of the
+    device-resident hot path.
+
+    For device backends (jax/pallas) ``facts``/``found`` (and the optional
+    fused per-unit KPI ``rollup``) are device arrays: creating the block
+    does NOT block on the dispatch, so the transform stage can hand the
+    block downstream while XLA is still computing. ``start_host_copy()``
+    enqueues the device→host copies asynchronously behind the compute;
+    ``to_host()`` — called once, at the warehouse-load boundary —
+    materializes and caches the host arrays (the step's single
+    host↔device round trip, counted in ``backend.host_syncs``). For the
+    numpy backend the arrays are already host-resident and ``to_host()``
+    is free.
+
+    ``n`` is the logical row count; device arrays may be padded to a
+    power-of-two bucket, and ``to_host()`` slices the pad rows off."""
+
+    __slots__ = ("_backend", "_facts", "_found", "_rollup", "n", "_host",
+                 "_rollup_host")
+
+    def __init__(self, backend: "ComputeBackend", facts, found, n: int,
+                 rollup=None):
+        self._backend = backend
+        self._facts = facts
+        self._found = found
+        self._rollup = rollup
+        self.n = int(n)
+        self._host: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        self._rollup_host: Optional[np.ndarray] = None
+
+    def __len__(self) -> int:
+        return self.n
+
+    @property
+    def backend(self) -> "ComputeBackend":
+        return self._backend
+
+    @property
+    def device(self) -> bool:
+        """True while the block's arrays live on device (not yet synced)."""
+        return self._backend.device and self._host is None
+
+    def start_host_copy(self) -> "FactBlock":
+        """Enqueue the D2H copies behind the in-flight device compute
+        WITHOUT blocking, so the copy overlaps downstream host work and the
+        eventual ``to_host()`` finds the bytes already (or nearly) landed.
+        No-op for host backends and already-materialized blocks."""
+        if self._backend.device and self._host is None:
+            for arr in (self._facts, self._found, self._rollup):
+                start = getattr(arr, "copy_to_host_async", None)
+                if start is not None:
+                    start()
+        return self
+
+    def to_host(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Materialize (facts [n, N_FACT] f32, found [n] bool) on host.
+        The FIRST call on a device block is the hot path's one blocking
+        sync (counted in ``backend.host_syncs``); repeats are cached."""
+        if self._host is None:
+            if self._backend.device:
+                self._backend.host_syncs += 1
+            facts = np.asarray(self._facts)[:self.n]
+            found = np.asarray(self._found)[:self.n]
+            if self._rollup is not None and self._rollup_host is None:
+                # tiny [n_units, KPI_LANES]; rides the same sync window
+                self._rollup_host = np.asarray(self._rollup)
+            self._host = (facts, found)
+        return self._host
+
+    def rollup_host(self) -> Optional[np.ndarray]:
+        """The fused per-unit KPI rollup [n_units, KPI_LANES] (host), or
+        None when the block was dispatched without one. After ``to_host``
+        this is a cached tiny copy accounted with the block's single
+        sync; called BEFORE ``to_host`` on a device block it must block
+        on the whole dispatch, so it counts its own sync — the counter
+        contract the tier-1 tests and CI dispatch gate pin stays honest
+        under call reordering."""
+        if self._rollup is None:
+            return None
+        if self._rollup_host is None:
+            if self._backend.device and self._host is None:
+                self._backend.host_syncs += 1
+            self._rollup_host = np.asarray(self._rollup)
+        return self._rollup_host
 
 
 class ComputeBackend:
@@ -143,6 +279,16 @@ class ComputeBackend:
     name: str = "abstract"
     device: bool = False     # True: wants the cache's device-mirrored state
 
+    def __init__(self):
+        # advisory instrumentation (single-threaded use: the dispatch
+        # benchmark + tier-1 dispatch-count tests); see reset_stats()
+        self.op_dispatches = 0   # device dispatch groups issued
+        self.host_syncs = 0      # blocking device->host materializations
+
+    def reset_stats(self) -> None:
+        self.op_dispatches = 0
+        self.host_syncs = 0
+
     # ------------------------------------------------------------- protocol
     def hash_probe(self, query_keys, keys_tbl, vals_tbl, txn_tbl
                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -150,14 +296,39 @@ class ComputeBackend:
         Returns host (values [n, W] f32, found [n] bool, txn [n])."""
         raise NotImplementedError
 
+    def transform_block(self, prod: np.ndarray, equipment, quality, *,
+                        join_depth: int = 1,
+                        n_units: Optional[int] = None) -> FactBlock:
+        """Fused fact-grain transform of production payloads [n, 8] against
+        the ``InMemoryTable`` caches, returned as a device-resident
+        ``FactBlock`` (NO host sync). With ``n_units`` set, the SAME
+        dispatch also produces the per-unit KPI rollup
+        (``FactBlock.rollup_host()`` — ``segment_reduce`` semantics over
+        the block's valid facts). ``join_depth > 1`` replays the probe
+        chain (§4.1.4 complexity knob — numerically a no-op, cost is the
+        point)."""
+        raise NotImplementedError
+
     def transform(self, prod: np.ndarray, equipment, quality, *,
                   join_depth: int = 1
                   ) -> Tuple[np.ndarray, np.ndarray]:
-        """Fused fact-grain transform of production payloads [n, 8] against
-        the ``InMemoryTable`` caches. Returns host (facts [n, N_FACT] f32,
-        found [n] bool). ``join_depth > 1`` replays the probe chain (§4.1.4
-        complexity knob — numerically a no-op, cost is the point)."""
-        raise NotImplementedError
+        """Host-convenience transform: ``transform_block`` + an immediate
+        ``to_host()``. Returns host (facts [n, N_FACT] f32, found [n]
+        bool). The device-resident hot path uses ``transform_block``
+        directly and defers the sync to the warehouse-load boundary."""
+        return self.transform_block(prod, equipment, quality,
+                                    join_depth=join_depth).to_host()
+
+    def transform_and_rollup(self, prod: np.ndarray, equipment, quality, *,
+                             n_units: int,
+                             join_depth: int = 1) -> FactBlock:
+        """Fused transform + per-unit KPI rollup in ONE dispatch: the
+        block's facts/found plus ``rollup_host()`` ==
+        ``segment_reduce(facts[found], n_units)`` (parity-tested like the
+        other ops). The hot path's replacement for the separate
+        transform-then-rollup round trips."""
+        return self.transform_block(prod, equipment, quality,
+                                    join_depth=join_depth, n_units=n_units)
 
     def segment_reduce(self, facts: np.ndarray, n_units: int) -> np.ndarray:
         """Per-equipment KPI rollup of a fact block: sums
@@ -169,20 +340,29 @@ class ComputeBackend:
                       n_segments: int) -> np.ndarray:
         """Fused multi-statistic delta fold for incremental materialized
         views: per segment, count + sum + min + max of every value lane in
-        one dispatch. ``seg_ids`` [n] int, ``values`` [n, L] f32; rows with
-        seg outside [0, n_segments) contribute nothing. Returns the packed
-        host table [n_segments, 1 + 3L] (see ``fold_width``)."""
+        one dispatch per block, segment-compacted (see ``_fold_blocks``).
+        ``seg_ids`` [n] int, ``values`` [n, L] f32; rows with seg outside
+        [0, n_segments) contribute nothing. Returns the packed host table
+        [n_segments, 1 + 3L] (see ``fold_width``)."""
         raise NotImplementedError
 
     # -------------------------------------------------------------- helpers
     @staticmethod
-    def _pad_bucket(prod: np.ndarray, floor: int = 1) -> np.ndarray:
+    def _pad_bucket(prod: np.ndarray, floor: int = 1,
+                    mutable: bool = False) -> np.ndarray:
         """Pad a payload block to a power-of-two bucket (>= floor) so jitted
-        dispatch compiles once per bucket, not once per arrival size."""
+        dispatch compiles once per bucket, not once per arrival size.
+
+        When ``n`` already fills the bucket the input is returned as-is
+        (zero-copy) — callers that WRITE into the padded block must pass
+        ``mutable=True``, which guarantees the result never aliases the
+        caller's array (a power-of-two-sized input used to come back
+        aliased, and ``PallasBackend.segment_reduce`` scribbled on its
+        caller's facts — see tests/test_backends.py regression)."""
         n = len(prod)
         bucket = max(floor, 1 << (n - 1).bit_length())
         if bucket == n:
-            return prod
+            return prod.copy() if mutable else prod
         padrow = np.full((bucket - n, prod.shape[1]), -1.0, np.float32)
         return np.concatenate([prod, padrow])
 
@@ -223,76 +403,94 @@ def get_backend(name: Union[str, ComputeBackend, None] = None
 
 
 # =========================================================== numpy backend
+def _hash_probe_np(query_keys, keys_tbl, vals_tbl, txn_tbl):
+    from repro.core.cache import MAX_PROBES, hash32_np
+    keys_tbl = np.asarray(keys_tbl)
+    vals_tbl = np.asarray(vals_tbl)
+    txn_tbl = np.asarray(txn_tbl)
+    n_slots = keys_tbl.shape[0]
+    q = (np.asarray(query_keys).astype(np.int64)
+         & 0xFFFFFFFF).astype(np.int32)
+    h = (hash32_np(q) % np.uint32(n_slots)).astype(np.int64)
+    n = len(q)
+    done = np.zeros(n, bool)
+    found = np.zeros(n, bool)
+    val = np.zeros((n, vals_tbl.shape[1]), np.float32)
+    txn = np.zeros(n, txn_tbl.dtype)
+    for p in range(MAX_PROBES):
+        cand = (h + p) % n_slots
+        k = keys_tbl[cand]
+        hit = (k == q) & ~done
+        empty = (k == -1) & ~done
+        if hit.any():
+            val[hit] = vals_tbl[cand[hit]]
+            txn[hit] = txn_tbl[cand[hit]]
+            found |= hit
+        done |= hit | empty
+        if done.all():
+            break
+    return val, found, txn
+
+
+def _segment_reduce_np(facts: np.ndarray, n_units: int) -> np.ndarray:
+    facts = np.asarray(facts, np.float32)
+    agg = np.zeros((n_units, KPI_LANES), np.float32)
+    if not len(facts):
+        return agg
+    unit = facts[:, 0].astype(np.int64)
+    # drop invalid facts AND out-of-range units, matching the jax/pallas
+    # behavior (segment_sum / one-hot ignore ids outside [0, n_units))
+    keep = (facts[:, 9] > 0.5) & (unit >= 0) & (unit < n_units)
+    kpis = np.concatenate(
+        [facts[keep, 3:7],
+         np.ones((int(keep.sum()), 1), np.float32)], axis=-1)
+    np.add.at(agg, unit[keep], kpis)
+    return agg
+
+
 @register_backend("numpy")
 class NumpyBackend(ComputeBackend):
     """Pure-host reference. Mirrors the jitted math op-for-op in float32 so
     parity with jax/pallas holds to ~1e-6; the correctness oracle and the
-    zero-dependency fallback."""
+    zero-dependency fallback. ``FactBlock``s are host-resident from birth
+    (``to_host`` is free and counts no sync)."""
 
     device = False
 
     def hash_probe(self, query_keys, keys_tbl, vals_tbl, txn_tbl):
-        from repro.core.cache import MAX_PROBES, hash32_np
-        keys_tbl = np.asarray(keys_tbl)
-        vals_tbl = np.asarray(vals_tbl)
-        txn_tbl = np.asarray(txn_tbl)
-        n_slots = keys_tbl.shape[0]
-        q = (np.asarray(query_keys).astype(np.int64)
-             & 0xFFFFFFFF).astype(np.int32)
-        h = (hash32_np(q) % np.uint32(n_slots)).astype(np.int64)
-        n = len(q)
-        done = np.zeros(n, bool)
-        found = np.zeros(n, bool)
-        val = np.zeros((n, vals_tbl.shape[1]), np.float32)
-        txn = np.zeros(n, txn_tbl.dtype)
-        for p in range(MAX_PROBES):
-            cand = (h + p) % n_slots
-            k = keys_tbl[cand]
-            hit = (k == q) & ~done
-            empty = (k == -1) & ~done
-            if hit.any():
-                val[hit] = vals_tbl[cand[hit]]
-                txn[hit] = txn_tbl[cand[hit]]
-                found |= hit
-            done |= hit | empty
-            if done.all():
-                break
-        return val, found, txn
+        self.op_dispatches += 1
+        return _hash_probe_np(query_keys, keys_tbl, vals_tbl, txn_tbl)
 
-    def transform(self, prod, equipment, quality, *, join_depth=1):
+    def transform_block(self, prod, equipment, quality, *, join_depth=1,
+                        n_units=None):
         prod = np.asarray(prod, np.float32)
         eq_state = (equipment.keys, equipment.values, equipment.txn)
         q_state = (quality.keys, quality.values, quality.txn)
         equip_id = prod[:, 1].astype(np.int64)
         prod_id = prod[:, 0].astype(np.int64)
-        eq_rows, eq_found, _ = self.hash_probe(equip_id, *eq_state)
-        q_rows, q_found, _ = self.hash_probe(prod_id, *q_state)
+        eq_rows, eq_found, _ = _hash_probe_np(equip_id, *eq_state)
+        q_rows, q_found, _ = _hash_probe_np(prod_id, *q_state)
         if join_depth > 1:            # flattened hop probe (cost knob;
             mod = max(len(eq_state[0]) // 4, 1)   # numeric no-op)
             hop_keys = ((equip_id[None, :]
                          + np.arange(1, join_depth)[:, None]) % mod)
-            self.hash_probe(hop_keys.reshape(-1), *eq_state)
+            _hash_probe_np(hop_keys.reshape(-1), *eq_state)
         found = eq_found & q_found
         facts = _kpi_facts_np(prod, eq_rows, q_rows, found)
-        return facts, found
+        rollup = (_segment_reduce_np(facts, n_units)
+                  if n_units is not None else None)
+        self.op_dispatches += 1       # the whole fused op: one "dispatch"
+        return FactBlock(self, facts, found, len(prod), rollup)
 
     def segment_reduce(self, facts, n_units):
-        facts = np.asarray(facts, np.float32)
-        agg = np.zeros((n_units, KPI_LANES), np.float32)
-        if not len(facts):
-            return agg
-        unit = facts[:, 0].astype(np.int64)
-        # drop invalid facts AND out-of-range units, matching the jax/pallas
-        # behavior (segment_sum / one-hot ignore ids outside [0, n_units))
-        keep = (facts[:, 9] > 0.5) & (unit >= 0) & (unit < n_units)
-        kpis = np.concatenate(
-            [facts[keep, 3:7],
-             np.ones((int(keep.sum()), 1), np.float32)], axis=-1)
-        np.add.at(agg, unit[keep], kpis)
-        return agg
+        self.op_dispatches += 1
+        return _segment_reduce_np(facts, n_units)
 
     def fold_segments(self, seg_ids, values, n_segments):
-        return _fold_blocks(seg_ids, values, n_segments, _fold_tree_np)
+        def tree(s, v, ns):
+            self.op_dispatches += 1
+            return _fold_tree_np(s, v, ns)
+        return _fold_blocks(seg_ids, values, n_segments, tree)
 
 
 def _kpi_facts_np(prod, eq_rows, q_rows, found) -> np.ndarray:
@@ -330,7 +528,10 @@ def _kpi_facts_np(prod, eq_rows, q_rows, found) -> np.ndarray:
 @register_backend("jax")
 class JaxBackend(ComputeBackend):
     """Jitted jnp path (XLA). The default: one fused dispatch per worker per
-    step, power-of-two bucket padding so steady-state recompiles are zero."""
+    step, power-of-two bucket padding so steady-state recompiles are zero.
+    ``transform_block`` returns without waiting on the dispatch — XLA's
+    async dispatch runs the compute (and, after ``start_host_copy``, the
+    D2H transfer) while the caller's host code keeps moving."""
 
     device = True
 
@@ -340,19 +541,31 @@ class JaxBackend(ComputeBackend):
         vals, found, txn = lookup_ref(
             jnp.asarray(np.asarray(query_keys), jnp.int32),
             keys_tbl, vals_tbl, txn_tbl)
+        self.op_dispatches += 1
+        self.host_syncs += 1
         return np.asarray(vals), np.asarray(found), np.asarray(txn)
 
-    def transform(self, prod, equipment, quality, *, join_depth=1):
+    def transform_block(self, prod, equipment, quality, *, join_depth=1,
+                        n_units=None):
         import jax.numpy as jnp
-        from repro.core.transformer import transform_kernel
+        from repro.core.transformer import (transform_kernel,
+                                            transform_rollup_kernel)
         prod = np.asarray(prod, np.float32)
         n = len(prod)
-        padded = self._pad_bucket(prod, floor=128)
+        padded = jnp.asarray(self._pad_bucket(prod, floor=128))
         eqk, eqv, eqt = equipment.device_state()
         qk, qv, qt = quality.device_state()
-        facts, found = transform_kernel(jnp.asarray(padded), eqk, eqv, eqt,
-                                        qk, qv, qt, join_depth=join_depth)
-        return np.asarray(facts)[:n], np.asarray(found)[:n]
+        if n_units is None:
+            facts, found = transform_kernel(padded, eqk, eqv, eqt,
+                                            qk, qv, qt,
+                                            join_depth=join_depth)
+            rollup = None
+        else:
+            facts, found, rollup = transform_rollup_kernel(
+                padded, eqk, eqv, eqt, qk, qv, qt,
+                join_depth=join_depth, n_units=n_units)
+        self.op_dispatches += 1       # ONE fused XLA dispatch, zero syncs
+        return FactBlock(self, facts, found, n, rollup)
 
     def segment_reduce(self, facts, n_units):
         import jax.numpy as jnp
@@ -360,15 +573,20 @@ class JaxBackend(ComputeBackend):
         if not len(facts):
             return np.zeros((n_units, KPI_LANES), np.float32)
         padded = self._pad_bucket(facts, floor=128)  # pads are valid=0 rows
+        self.op_dispatches += 1
+        self.host_syncs += 1
         return np.asarray(_rollup_jnp(jnp.asarray(padded), n_units))
 
     def fold_segments(self, seg_ids, values, n_segments):
         # the jitted twin of the numpy halving tree: identical op order on
         # static shapes, so results are BITWISE equal to the numpy backend
         # (asserted by tests/test_serving.py) while the dispatch itself is
-        # one fused XLA call per block
+        # one fused XLA call per block (over the COMPACTED segment range —
+        # see _fold_blocks)
         def tree(s, v, ns):
             import jax.numpy as jnp
+            self.op_dispatches += 1
+            self.host_syncs += 1
             return np.asarray(_fold_tree_jnp(jnp.asarray(s, jnp.int32),
                                              jnp.asarray(v), ns))
         return _fold_blocks(seg_ids, values, n_segments, tree)
@@ -442,7 +660,13 @@ def _fold_tree_jnp(seg, vals, n_segments: int):
 class PallasBackend(ComputeBackend):
     """TPU Pallas kernels (``hash_join`` one-hot-MXU probe, ``segment_kpi``
     fused KPI + rollup). On CPU hosts the kernels run in interpret mode —
-    slow but contract-identical, so parity tests cover the kernel path."""
+    slow but contract-identical, so parity tests cover the kernel path.
+
+    ``transform_block`` issues a constant FEW dispatch groups (two probes,
+    the optional hop probe, the fused KPI kernel) rather than jax's single
+    one — the per-unit rollup still rides the ``segment_kpi`` kernel's
+    fused epilogue, and the block stays device-resident with zero host
+    syncs until ``to_host()``."""
 
     device = True
 
@@ -452,9 +676,12 @@ class PallasBackend(ComputeBackend):
         vals, found, txn = hash_join(
             jnp.asarray(np.asarray(query_keys), jnp.int32),
             keys_tbl, vals_tbl, txn_tbl)
+        self.op_dispatches += 1
+        self.host_syncs += 1
         return np.asarray(vals), np.asarray(found), np.asarray(txn)
 
-    def transform(self, prod, equipment, quality, *, join_depth=1):
+    def transform_block(self, prod, equipment, quality, *, join_depth=1,
+                        n_units=None):
         import jax.numpy as jnp
         from repro.kernels.hash_join.ops import hash_join
         from repro.kernels.segment_kpi.ops import segment_kpi
@@ -467,12 +694,14 @@ class PallasBackend(ComputeBackend):
         prod_id = padded[:, 0].astype(jnp.int32)
         eq_rows, eq_found, _ = hash_join(equip_id, eqk, eqv, eqt)
         q_rows, q_found, _ = hash_join(prod_id, qk, qv, qt)
+        self.op_dispatches += 2
         if join_depth > 1:            # flattened hop probe (cost knob;
             mod = jnp.int32(max(eqk.shape[0] // 4, 1))  # numeric no-op)
             hop_keys = ((equip_id[None, :]
                          + jnp.arange(1, join_depth,
                                       dtype=jnp.int32)[:, None]) % mod)
             hash_join(hop_keys.reshape(-1), eqk, eqv, eqt)
+            self.op_dispatches += 1
         found = eq_found & q_found
         # the kernel derives its valid flag from the joined rows' key lane:
         # mark misses so facts[:, -1] equals the probe's found mask
@@ -480,10 +709,15 @@ class PallasBackend(ComputeBackend):
             jnp.where(eq_found, eq_rows[:, 1], -1.0))
         q_rows = q_rows.at[:, 1].set(
             jnp.where(q_found, q_rows[:, 1], -1.0))
-        # the fused kernel always emits an aggregate; transform only needs
-        # the facts (rollup is its own op), so keep that epilogue minimal
-        facts, _ = segment_kpi(padded, eq_rows, q_rows, n_units=1)
-        return np.asarray(facts)[:n], np.asarray(found)[:n]
+        # the fused kernel ALWAYS emits the per-unit aggregate; with
+        # n_units requested it IS the rollup (one kernel produces facts +
+        # KPI aggregate — the transform_and_rollup contract), otherwise the
+        # epilogue is kept minimal and the aggregate dropped
+        facts, agg = segment_kpi(padded, eq_rows, q_rows,
+                                 n_units=n_units if n_units else 1)
+        self.op_dispatches += 1
+        rollup = agg if n_units else None
+        return FactBlock(self, facts, found, n, rollup)
 
     def segment_reduce(self, facts, n_units):
         import jax.numpy as jnp
@@ -491,30 +725,37 @@ class PallasBackend(ComputeBackend):
         facts = np.asarray(facts, np.float32)
         if not len(facts):
             return np.zeros((n_units, KPI_LANES), np.float32)
-        padded = self._pad_bucket(facts, floor=256)
+        # mutable=True: the pad-marking write below must never land in the
+        # caller's array (power-of-two inputs used to come back aliased)
+        padded = self._pad_bucket(facts, floor=256, mutable=True)
         padded[len(facts):, 9] = 0.0           # pad rows marked invalid
+        self.op_dispatches += 1
+        self.host_syncs += 1
         return np.asarray(segment_rollup(jnp.asarray(padded),
                                          n_units=n_units))
 
     def fold_segments(self, seg_ids, values, n_segments):
         # fused kernel path: one-hot MXU matmul for count+sum, masked lane
-        # reductions for min/max (see kernels/segment_kpi). The MXU's
-        # reduction order differs from the halving tree, so this backend is
-        # parity-checked to ~1e-5, not bitwise (same contract as the other
-        # pallas ops).
+        # reductions for min/max (see kernels/segment_kpi), over the
+        # compacted segment range. The MXU's reduction order differs from
+        # the halving tree, so this backend is parity-checked to ~1e-5,
+        # not bitwise (same contract as the other pallas ops).
         def tree(s, v, ns):
             import jax.numpy as jnp
             from repro.kernels.segment_kpi.ops import fold_segments
             packed = jnp.concatenate(
                 [jnp.asarray(s, jnp.float32)[:, None], jnp.asarray(v)],
                 axis=1)
+            self.op_dispatches += 1
+            self.host_syncs += 1
             return np.asarray(fold_segments(packed, n_segments=ns))
         return _fold_blocks(seg_ids, values, n_segments, tree)
 
 
 __all__ = [
-    "ComputeBackend", "NumpyBackend", "JaxBackend", "PallasBackend",
-    "register_backend", "get_backend", "available_backends",
-    "resolve_backend_name", "DEFAULT_BACKEND", "ENV_VAR", "KPI_LANES",
-    "FOLD_BLOCK", "fold_width", "empty_fold_state", "combine_fold",
+    "ComputeBackend", "FactBlock", "NumpyBackend", "JaxBackend",
+    "PallasBackend", "register_backend", "get_backend",
+    "available_backends", "resolve_backend_name", "DEFAULT_BACKEND",
+    "ENV_VAR", "KPI_LANES", "FOLD_BLOCK", "fold_width", "empty_fold_state",
+    "combine_fold",
 ]

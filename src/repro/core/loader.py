@@ -57,6 +57,12 @@ class StarSchemaWarehouse:
         self.rows_loaded = 0
         self.load_calls = 0
         self.commit_seq = 0
+        # running per-unit KPI aggregate fed by the fused
+        # transform_and_rollup dispatches (an O(1) read path next to the
+        # kpi_rollup full rescan); rows loaded WITHOUT a rollup — legacy
+        # per-partition loops, the record-at-a-time baseline — gap it
+        self._kpi_running: Optional[np.ndarray] = None
+        self._kpi_gap_rows = 0
 
     # ------------------------------------------------------------ serving hook
     def attach_serving(self, engine):
@@ -72,17 +78,29 @@ class StarSchemaWarehouse:
         return engine
 
     def _commit(self, block: np.ndarray,
-                event_times: Optional[np.ndarray]) -> None:
+                event_times: Optional[np.ndarray],
+                rollup: Optional[np.ndarray] = None) -> None:
         """Lock-held: record the block in the committed chunk log, bump the
-        commit sequence, publish the delta."""
+        commit sequence, fold the fused rollup into the running KPI
+        aggregate, publish the delta."""
         self._chunk_log.append(block)
         self.commit_seq += 1
+        if rollup is not None:
+            if self._kpi_running is None:
+                self._kpi_running = np.zeros_like(rollup)
+            if self._kpi_running.shape == rollup.shape:
+                self._kpi_running = self._kpi_running + rollup
+            else:                     # mixed n_units producers: no O(1) path
+                self._kpi_gap_rows += len(block)
+        else:
+            self._kpi_gap_rows += len(block)
         if self._serving is not None:
             self._serving.publish(block, event_times)
 
     # -------------------------------------------------------------- load paths
     def load(self, partition: int, facts: np.ndarray,
-             event_times: Optional[np.ndarray] = None) -> None:
+             event_times: Optional[np.ndarray] = None,
+             rollup: Optional[np.ndarray] = None) -> None:
         """Per-partition append (the caller already split by partition)."""
         if len(facts) == 0:
             return
@@ -90,10 +108,11 @@ class StarSchemaWarehouse:
         with self._lock:
             self.rows_loaded += len(facts)
             self.load_calls += 1
-            self._commit(facts, event_times)
+            self._commit(facts, event_times, rollup)
 
     def load_partitioned(self, facts: np.ndarray, n_partitions: int,
-                         event_times: Optional[np.ndarray] = None) -> int:
+                         event_times: Optional[np.ndarray] = None,
+                         rollup: Optional[np.ndarray] = None) -> int:
         """Group a coalesced fact block by business-key partition (fact
         col 0 IS the business key — each partition's rows land contiguous,
         'executing its query statements independently') and commit it as
@@ -115,7 +134,7 @@ class StarSchemaWarehouse:
         with self._lock:
             self.rows_loaded += n
             self.load_calls += n_hit     # one logical append per partition
-            self._commit(sorted_facts, sorted_times)
+            self._commit(sorted_facts, sorted_times, rollup)
         return n
 
     # -------------------------------------------------------------- read paths
@@ -126,6 +145,19 @@ class StarSchemaWarehouse:
         with self._lock:
             return WarehouseView(chunks=tuple(self._chunk_log),
                                  seq=self.commit_seq, rows=self.rows_loaded)
+
+    def kpi_running(self) -> Optional[np.ndarray]:
+        """The running per-unit KPI aggregate [n_units, 5] accumulated from
+        the fused ``transform_and_rollup`` dispatches at load time — an
+        O(1) read that never rescans the fact table. Returns None when any
+        committed rows arrived without a rollup (legacy per-partition
+        loops, the baseline), because the aggregate would under-count;
+        ``kpi_rollup`` below remains the full-rescan oracle it is
+        parity-tested against."""
+        with self._lock:
+            if self._kpi_running is None or self._kpi_gap_rows:
+                return None
+            return self._kpi_running.copy()
 
     def kpi_rollup(self, n_units: int, backend=None,
                    view: Optional[WarehouseView] = None) -> np.ndarray:

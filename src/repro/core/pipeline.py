@@ -62,9 +62,13 @@ class StreamProcessorWorker:
         self.quality = InMemoryTable(cfg.cache_slots, cfg.cache_row_width,
                                      backend=self.backend)
         self.buffer = OperationalMessageBuffer(cfg.buffer_capacity)
+        # n_units wires the fused transform_and_rollup: every transform
+        # dispatch also carries the per-unit KPI aggregate (equipment ids
+        # ARE the business keys), feeding warehouse.kpi_running in O(1)
         self.transformer = DataTransformer(self.equipment, self.quality,
                                            self.buffer, join_depth,
-                                           backend=self.backend)
+                                           backend=self.backend,
+                                           n_units=cfg.n_business_keys)
         self.metrics = StageMetrics()
         self.group = f"sp.{name}"
 
@@ -164,16 +168,25 @@ class StreamProcessorWorker:
     def process_operational(self, topic: str, max_records: Optional[int] = None
                             ) -> int:
         """One micro-batch step over this worker's partitions: coalesced
-        consume -> ONE backend dispatch -> split facts per partition at
-        load time. ``max_records`` still bounds each partition's read so
-        offset/rebalance semantics are unchanged."""
+        consume -> ONE fused transform+rollup dispatch (device-resident
+        ``FactBlock``) -> materialize at the warehouse-load boundary ->
+        split facts per partition at load time, folding the fused per-unit
+        KPI rollup into the warehouse's running aggregate. ``max_records``
+        still bounds each partition's read so offset/rebalance semantics
+        are unchanged."""
         t0 = time.perf_counter()
         batch, counts = self.queue.consume_many(
             self.group, topic, self.partitions, max_records)
         for p, c in counts.items():
             self.queue.commit(self.group, topic, p, c)
-        facts, _ = self.transformer.process(batch)
-        done = self.warehouse.load_partitioned(facts, self.cfg.n_partitions)
+        block, merged = self.transformer.process_block(batch)
+        if block is None:
+            self.metrics.wall_s += time.perf_counter() - t0
+            return 0
+        block.start_host_copy()          # D2H rides behind the compute
+        facts, _ = self.transformer.finish(block, merged)
+        done = self.warehouse.load_partitioned(facts, self.cfg.n_partitions,
+                                               rollup=block.rollup_host())
         self.metrics.records += done
         self.metrics.wall_s += time.perf_counter() - t0
         return done

@@ -30,14 +30,13 @@ FACT_COLUMNS = ("equipment_id", "t_start", "t_end", "availability",
                 "performance", "quality", "oee", "seg_on", "seg_off", "valid")
 
 
-@functools.partial(jax.jit, static_argnames=("join_depth",))
-def transform_kernel(prod: jax.Array,
-                     eq_keys: jax.Array, eq_vals: jax.Array, eq_txn: jax.Array,
-                     q_keys: jax.Array, q_vals: jax.Array, q_txn: jax.Array,
-                     join_depth: int = 1) -> Tuple[jax.Array, jax.Array]:
-    """prod: [n, 8] f32 production payloads. Returns (facts [n, 10] f32,
-    found [n] bool). ``join_depth > 1`` replays the join chain to model
-    normalized (ISA-95-style) schemas — §4.1.4's complexity knob."""
+def _transform_math(prod: jax.Array,
+                    eq_keys: jax.Array, eq_vals: jax.Array, eq_txn: jax.Array,
+                    q_keys: jax.Array, q_vals: jax.Array, q_txn: jax.Array,
+                    join_depth: int = 1) -> Tuple[jax.Array, jax.Array]:
+    """Traced body shared by ``transform_kernel`` and
+    ``transform_rollup_kernel`` — identical math, so fusing the rollup
+    into the dispatch can never change the facts."""
     from repro.core.cache import lookup_ref
 
     equip_id = prod[:, 1].astype(jnp.int32)
@@ -93,6 +92,72 @@ def transform_kernel(prod: jax.Array,
     return facts, found
 
 
+@functools.partial(jax.jit, static_argnames=("join_depth",))
+def transform_kernel(prod: jax.Array,
+                     eq_keys: jax.Array, eq_vals: jax.Array, eq_txn: jax.Array,
+                     q_keys: jax.Array, q_vals: jax.Array, q_txn: jax.Array,
+                     join_depth: int = 1) -> Tuple[jax.Array, jax.Array]:
+    """prod: [n, 8] f32 production payloads. Returns (facts [n, 10] f32,
+    found [n] bool). ``join_depth > 1`` replays the join chain to model
+    normalized (ISA-95-style) schemas — §4.1.4's complexity knob."""
+    return _transform_math(prod, eq_keys, eq_vals, eq_txn,
+                           q_keys, q_vals, q_txn, join_depth)
+
+
+def _transform_rollup(prod: jax.Array,
+                      eq_keys: jax.Array, eq_vals: jax.Array,
+                      eq_txn: jax.Array,
+                      q_keys: jax.Array, q_vals: jax.Array,
+                      q_txn: jax.Array,
+                      join_depth: int = 1, n_units: int = 1
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    facts, found = _transform_math(prod, eq_keys, eq_vals, eq_txn,
+                                   q_keys, q_vals, q_txn, join_depth)
+    unit = facts[:, 0].astype(jnp.int32)
+    ok = found & (unit >= 0) & (unit < n_units)
+    kpis = jnp.concatenate(
+        [facts[:, 3:7], jnp.ones((facts.shape[0], 1), jnp.float32)],
+        axis=-1)
+    kpis = jnp.where(ok[:, None], kpis, 0.0)
+    # rows failing the guard route to a trash segment past n_units
+    agg = jax.ops.segment_sum(kpis, jnp.where(ok, unit, n_units),
+                              num_segments=n_units + 1)[:n_units]
+    return facts, found, agg
+
+
+_ROLLUP_KERNEL_JIT = None
+
+
+def transform_rollup_kernel(prod: jax.Array,
+                            eq_keys: jax.Array, eq_vals: jax.Array,
+                            eq_txn: jax.Array,
+                            q_keys: jax.Array, q_vals: jax.Array,
+                            q_txn: jax.Array,
+                            join_depth: int = 1, n_units: int = 1
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """The device-resident hot path's SINGLE dispatch: transform + per-unit
+    KPI rollup fused. Returns (facts [n, 10] f32, found [n] bool,
+    agg [n_units, 5] f32) where agg matches ``segment_reduce`` over the
+    block's valid facts (pad rows carry unit -1 and drop out of the
+    in-range guard, exactly like out-of-range units).
+
+    Jitted lazily on first call: the padded production buffer is DONATED
+    on real accelerators (a per-dispatch temporary, uploaded fresh each
+    call, so XLA reuses its memory for the outputs) — but deciding that
+    needs ``jax.default_backend()``, which initializes the platform, and
+    an import-time call would lock the platform before callers can set
+    XLA flags (CPU also warns on every donating compile)."""
+    global _ROLLUP_KERNEL_JIT
+    if _ROLLUP_KERNEL_JIT is None:
+        donate = () if jax.default_backend() == "cpu" else (0,)
+        _ROLLUP_KERNEL_JIT = functools.partial(
+            jax.jit, static_argnames=("join_depth", "n_units"),
+            donate_argnums=donate)(_transform_rollup)
+    return _ROLLUP_KERNEL_JIT(prod, eq_keys, eq_vals, eq_txn,
+                              q_keys, q_vals, q_txn,
+                              join_depth=join_depth, n_units=n_units)
+
+
 def q_vals_cols(q_rows: jax.Array) -> Tuple[jax.Array, jax.Array]:
     return q_rows[:, 4], q_rows[:, 6]
 
@@ -101,15 +166,20 @@ class DataTransformer:
     """Stateful wrapper: caches + late buffer + metrics for one worker.
     The numeric core is delegated to the selected ``ComputeBackend`` —
     one fused transform dispatch per call, regardless of how many queue
-    partitions were coalesced into the batch."""
+    partitions were coalesced into the batch. With ``n_units`` set the
+    dispatch also carries the per-unit KPI rollup (the fused
+    ``transform_and_rollup`` op), and the result stays device-resident
+    as a ``FactBlock`` until the warehouse-load boundary."""
 
     def __init__(self, equipment: InMemoryTable, quality: InMemoryTable,
-                 buffer, join_depth: int = 1, backend=None):
+                 buffer, join_depth: int = 1, backend=None,
+                 n_units: Optional[int] = None):
         from repro.core.backend import get_backend
         self.equipment = equipment
         self.quality = quality
         self.buffer = buffer
         self.join_depth = join_depth
+        self.n_units = n_units    # fused-rollup width (None: facts only)
         self.backend = get_backend(backend)
         self.records_out = 0
         self.records_late = 0
@@ -118,23 +188,51 @@ class DataTransformer:
     def watermark(self) -> int:
         return min(self.equipment.watermark, self.quality.watermark)
 
-    def transform_only(self, batch, equipment=None, quality=None
-                       ) -> Tuple[np.ndarray, np.ndarray]:
+    def transform_block(self, batch, equipment=None, quality=None):
         """Pure numeric transform of a RecordBatch: ONE backend dispatch,
-        no buffer interaction. Returns (facts [n, 10], found [n] bool).
-        The concurrent runtime's transform stage calls this with immutable
-        ``CacheSnapshot`` views (taken under the worker's cache lock) so
-        the dispatch itself runs LOCK-FREE and overlaps the ingest stage's
-        master pumps; late-record buffering and retries happen in the load
-        stage, under the worker's commit lock, so a mid-run kill can never
-        strand a record between the buffer and the warehouse."""
-        facts, found = self.backend.transform(
+        no buffer interaction, NO host sync — returns a device-resident
+        ``FactBlock`` (facts + found + fused per-unit rollup when
+        ``n_units`` is configured). The concurrent runtime's transform
+        stage calls this with immutable ``CacheSnapshot`` views (taken
+        under the worker's cache lock) so the dispatch itself runs
+        LOCK-FREE and overlaps the ingest stage's master pumps; the block
+        materializes to host only in the load stage, under the worker's
+        commit lock, so device compute + D2H overlap the load stage's
+        host work instead of blocking here."""
+        block = self.backend.transform_block(
             batch.payload,
             equipment if equipment is not None else self.equipment,
             quality if quality is not None else self.quality,
-            join_depth=self.join_depth)
+            join_depth=self.join_depth, n_units=self.n_units)
         self.dispatches += 1
-        return facts, found
+        return block
+
+    def process_block(self, prod_batch):
+        """Retry-merge + dispatch WITHOUT the host sync: pops
+        watermark-ready buffered records, concats them ahead of the new
+        batch, issues one dispatch. Returns (block, merged_batch) —
+        block is None when there was nothing to transform. ``finish``
+        (or the load stage) completes the late-buffer accounting once the
+        block is materialized."""
+        from repro.core.records import RecordBatch
+
+        retry = self.buffer.pop_ready(self.watermark())
+        batch = RecordBatch.concat([retry, prod_batch])
+        if not len(batch):
+            return None, batch
+        return self.transform_block(batch), batch
+
+    def finish(self, block, batch) -> Tuple[np.ndarray, int]:
+        """Host-side epilogue of ``process_block``: materialize the block
+        (the step's one sync), buffer the late records, account metrics.
+        Returns (good_facts [m, 10], n_late)."""
+        facts, found = block.to_host()
+        late = batch.filter(~found)
+        self.buffer.push(late)
+        self.records_late += len(late)
+        good_facts = facts[found]
+        self.records_out += len(good_facts)
+        return good_facts, len(late)
 
     def process(self, prod_batch) -> Tuple[np.ndarray, int]:
         """prod_batch: RecordBatch of production records. Returns
@@ -145,18 +243,7 @@ class DataTransformer:
         Backends pad to power-of-two buckets internally so jitted kernels
         compile once per bucket, not once per arrival size (a 100x
         throughput cliff otherwise)."""
-        from repro.core.records import RecordBatch
-
-        retry = self.buffer.pop_ready(self.watermark())
-        batch = RecordBatch.concat([retry, prod_batch])
-        n = len(batch)
-        if not n:
+        block, batch = self.process_block(prod_batch)
+        if block is None:
             return np.zeros((0, len(FACT_COLUMNS)), np.float32), 0
-
-        facts, found = self.transform_only(batch)
-        late = batch.filter(~found)
-        self.buffer.push(late)
-        self.records_late += len(late)
-        good_facts = facts[found]
-        self.records_out += len(good_facts)
-        return good_facts, len(late)
+        return self.finish(block, batch)

@@ -1,4 +1,14 @@
-"""Public wrapper: pads to the block size, sums the per-block rollups."""
+"""Public wrappers: pad to the kernel block size, combine the per-block
+partials ON DEVICE (no host sync — the results stay jax arrays, so the
+pallas backend's ``FactBlock``s remain device-resident until the
+warehouse-load boundary).
+
+``segment_kpi`` is the pallas backend's ``transform_and_rollup`` core:
+one fused kernel emits the fact rows AND the per-unit KPI aggregate, so
+the hot path never re-uploads the block for a separate rollup dispatch.
+``fold_segments`` receives the serving layer's SEGMENT-COMPACTED deltas
+(``n_segments`` here is the compacted tree width, not the view's full
+segment count — see ``repro.core.backend._fold_blocks``)."""
 from __future__ import annotations
 
 import jax
@@ -11,6 +21,11 @@ from repro.kernels.segment_kpi.segment_kpi import (fold_segments_kernel,
 
 def segment_kpi(prod, eq_rows, q_rows, *, n_units: int = 32,
                 block: int = 256):
+    """Fused fact build + per-unit KPI rollup: returns (facts [N, 10],
+    agg [n_units, 5]), both device-resident (agg's cross-block sum is a
+    device op). Rows whose joined master rows are marked missing
+    (col 1 < 0) — and pad rows, whose unit id is -1 — contribute nothing
+    to the aggregate."""
     n = prod.shape[0]
     pad = (-n) % block
     if pad:

@@ -150,12 +150,16 @@ class _Work:
 
 @dataclasses.dataclass
 class _Transformed:
-    """Transform -> load hand-off: facts awaiting the atomic load+commit."""
+    """Transform -> load hand-off: a device-resident ``FactBlock`` awaiting
+    the atomic load+commit. The transform stage never blocks on the
+    dispatch — the block materializes to host in the LOAD stage (the
+    step's single device sync), so device compute and the async D2H copy
+    overlap this worker's load-side host work (queue commits, partition
+    split, buffer accounting) instead of serializing behind it."""
     topic: str
     batch: RecordBatch
     counts: Dict[int, int]
-    facts: np.ndarray
-    found: np.ndarray
+    block: object                   # repro.core.backend.FactBlock
 
 
 @dataclasses.dataclass
@@ -343,20 +347,25 @@ class WorkerRuntime:
             with self.cache_lock:
                 eq = self.worker.equipment.snapshot_view(device)
                 qu = self.worker.quality.snapshot_view(device)
-            facts, found = self.worker.transformer.transform_only(
-                item.batch, eq, qu)
+            # ONE fused transform+rollup dispatch, NO host sync: the block
+            # is handed to the load stage device-resident, with the D2H
+            # copy enqueued asynchronously behind the compute
+            block = self.worker.transformer.transform_block(
+                item.batch, eq, qu).start_host_copy()
             if not self._put(self.load_q,
                              _Transformed(item.topic, item.batch, item.counts,
-                                          facts, found)):
+                                          block)):
                 self.items_dropped_transform += 1        # shutdown only
                 self.records_dropped_transform += len(item.batch)
 
     # ------------------------------------------------------------- stage: load
-    def _load_and_record(self, batch: RecordBatch, facts: np.ndarray,
-                         found: np.ndarray) -> int:
-        """Commit-lock-held helper: buffer lates, load facts, sample
-        freshness. Returns records loaded."""
+    def _load_and_record(self, batch: RecordBatch, block) -> int:
+        """Commit-lock-held helper: materialize the device block (the
+        step's ONE host↔device round trip — the async copy started at
+        dispatch time has usually landed by now), buffer lates, load
+        facts + fused rollup, sample freshness. Returns records loaded."""
         w = self.worker
+        facts, found = block.to_host()
         w.buffer.push(batch.filter(~found))
         good = facts[found]
         if not len(good):
@@ -366,7 +375,8 @@ class WorkerRuntime:
         # event times ride into the warehouse so an attached serving layer
         # can stamp per-record report staleness on the same CDC clock
         w.warehouse.load_partitioned(good, self.pipe.cfg.n_partitions,
-                                     event_times=ev)
+                                     event_times=ev,
+                                     rollup=block.rollup_host())
         self.latency.add(log.clock() - ev)
         self.records_done += len(good)
         return len(good)
@@ -388,8 +398,9 @@ class WorkerRuntime:
                 with self.cache_lock:
                     eq = w.equipment.snapshot_view(device)
                     qu = w.quality.snapshot_view(device)
-                facts, found = w.transformer.transform_only(ready, eq, qu)
-                self._load_and_record(ready, facts, found)
+                block = w.transformer.transform_block(
+                    ready, eq, qu).start_host_copy()
+                self._load_and_record(ready, block)
             self.retry_inflight = 0
 
     def _load_loop(self) -> None:
@@ -402,7 +413,7 @@ class WorkerRuntime:
                 continue
             with self.commit_lock:
                 if not self.dead:
-                    self._load_and_record(item.batch, item.facts, item.found)
+                    self._load_and_record(item.batch, item.block)
                     for p, c in item.counts.items():
                         self.worker.queue.commit(self.worker.group,
                                                  item.topic, p, c)

@@ -31,7 +31,10 @@ Determinism: folds replay bit-for-bit. Segment/value extraction is host
 numpy, the per-delta fold is the backend's deterministic halving tree
 (numpy and jax produce bitwise-identical tables), and deltas are folded
 strictly in publication order with block boundaries fixed by delta
-length. ``rebuild`` therefore reproduces the incremental state
+length. Folds are segment-COMPACTED — the tree runs over only the
+delta's live segments and scatters into the packed table — which leaves
+every per-segment op order unchanged (see ``backend._fold_blocks``), so
+compaction is invisible to the determinism contract. ``rebuild`` therefore reproduces the incremental state
 byte-identically from the warehouse's committed chunk log — the
 recompute-from-scratch oracle the equivalence tests assert against.
 """
@@ -236,10 +239,16 @@ class MaterializedViewEngine:
         return self.staleness_recorder.percentiles(drain)
 
     def prewarm(self) -> None:
-        """Compile every fold bucket a delta can hit (device backends jit
-        one kernel per (block, n_segments, n_lanes) shape). Call before
-        measuring or serving live traffic so the first folds don't stall
-        behind compilation; a no-op for host backends."""
+        """Compile the fold buckets a delta can hit (device backends jit
+        one kernel per (rows, tree-width, n_lanes) shape). Folds are
+        segment-compacted, so the tree width is
+        ``min(n_segments, pow2(n_active))`` — warm every row bucket at
+        full coverage (which sweeps the width ladder as the bucket grows)
+        plus the narrow widths at the largest bucket; a sparse delta shape
+        not warmed here compiles a smaller, cheaper tree on first hit.
+        Call before measuring or serving live traffic so steady-state
+        folds never stall behind compilation; a no-op for host
+        backends."""
         if not self.backend.device:
             return
         from repro.core.backend import FOLD_BLOCK
@@ -247,10 +256,18 @@ class MaterializedViewEngine:
         for n_segments, n_lanes in shapes:
             m = 8
             while m <= FOLD_BLOCK:
+                # full coverage: n_active = min(m, n_segments)
                 self.backend.fold_segments(
-                    np.full(m, -1, np.int64),
+                    np.arange(m, dtype=np.int64) % n_segments,
                     np.zeros((m, n_lanes), np.float32), n_segments)
                 m *= 2
+            width = 8
+            while width < n_segments:      # sparse widths, largest bucket
+                self.backend.fold_segments(
+                    np.arange(FOLD_BLOCK, dtype=np.int64) % width,
+                    np.zeros((FOLD_BLOCK, n_lanes), np.float32),
+                    n_segments)
+                width *= 2
 
     # -------------------------------------------------------------- maintenance
     def start(self) -> None:

@@ -1,16 +1,49 @@
 """Compute-backend layer tests: numpy/jax/pallas parity on every hot op,
-single-dispatch coalescing, and rebalance offset handoff (paper §3.2)."""
+single-dispatch coalescing, the device-resident FactBlock plane
+(transform_and_rollup = one dispatch, zero syncs before load), and
+rebalance offset handoff (paper §3.2)."""
 import numpy as np
 import pytest
 
 from repro.configs.dod_etl import steelworks_config
 from repro.core import (DODETLPipeline, MessageQueue, RecordBatch,
                         SourceDatabase, TopicConfig, get_backend, make_batch)
-from repro.core.backend import available_backends
+from repro.core.backend import (ComputeBackend, available_backends,
+                                _segment_reduce_np)
 from repro.core.cache import InMemoryTable
 from repro.data.sampler import SamplerConfig, SteelworksSampler
 
 BACKENDS = ("numpy", "jax", "pallas")
+
+
+def _master_tables(rng, n_units=8, n_prod=300):
+    """Populated equipment/quality caches + production payloads with a mix
+    of hits and misses, for direct backend-op tests."""
+    eq = InMemoryTable(256)
+    eqp = np.zeros((n_units, 8), np.float32)
+    eqp[:, 1] = np.arange(n_units)
+    eqp[:, 4] = 100.0
+    eqp[:, 5] = (rng.random(n_units) > 0.3).astype(np.float32)
+    eqp[:, 6] = 5.0 + rng.random(n_units).astype(np.float32)
+    eqp[:, 7] = 50.0
+    eq.upsert(np.arange(n_units), eqp, np.arange(n_units, dtype=np.int64))
+    qu = InMemoryTable(1024)
+    qp = np.zeros((n_prod, 8), np.float32)
+    qp[:, 3] = np.arange(n_prod)
+    qp[:, 4] = rng.integers(0, 3, n_prod)
+    qp[:, 6] = rng.integers(0, 2, n_prod)
+    qu.upsert(np.arange(n_prod), qp, np.arange(n_prod, dtype=np.int64))
+    return eq, qu
+
+
+def _prod_payloads(rng, n, n_units=8, n_prod=300):
+    prod = np.zeros((n, 8), np.float32)
+    prod[:, 0] = rng.integers(0, n_prod, n)
+    prod[:, 1] = rng.integers(0, n_units + 2, n)     # some join misses
+    prod[:, 3] = rng.uniform(0, 50, n)
+    prod[:, 4] = prod[:, 3] + rng.uniform(1, 30, n)
+    prod[:, 5] = rng.uniform(1, 100, n)
+    return prod
 
 
 def _pipeline(backend, n_records=300, n_workers=2, n_partitions=4,
@@ -172,6 +205,137 @@ def test_single_dispatch_per_worker_per_step():
     for w in pipe.workers:
         assert len(w.partitions) == 4
         assert w.transformer.dispatches == before[w.name] + 1
+
+
+# ---------------------------------------------------- device-resident plane
+def test_factblock_transform_and_rollup_parity():
+    """The fused op's contract on every backend: the block's facts/found
+    equal the plain transform's, and the fused rollup equals the
+    segment_reduce oracle over the block's valid facts."""
+    rng = np.random.default_rng(11)
+    eq, qu = _master_tables(rng)
+    prod = _prod_payloads(rng, 137)
+    ref_facts, ref_found = get_backend("numpy").transform(prod, eq, qu)
+    ref_roll = _segment_reduce_np(ref_facts[ref_found], 8)
+    assert ref_found.any() and not ref_found.all()
+    for name in BACKENDS:
+        be = get_backend(name)
+        block = be.transform_and_rollup(prod, eq, qu, n_units=8)
+        assert len(block) == 137
+        facts, found = block.to_host()
+        np.testing.assert_array_equal(found, ref_found)
+        np.testing.assert_allclose(facts, ref_facts, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(block.rollup_host(), ref_roll,
+                                   rtol=1e-5, atol=1e-4)
+        # materialization is cached: repeat calls return the same arrays
+        again_facts, again_found = block.to_host()
+        assert again_facts is facts and again_found is found
+
+
+def test_factblock_dispatch_and_sync_counters():
+    """The tentpole invariant, counted: on the jax backend a fused
+    transform+rollup is ONE device dispatch and ZERO host syncs until the
+    load boundary materializes the block (exactly one sync, cached after
+    that). Device backends stay sync-free before to_host."""
+    rng = np.random.default_rng(12)
+    eq, qu = _master_tables(rng)
+    prod = _prod_payloads(rng, 200)
+    jx = get_backend("jax")
+    jx.transform_and_rollup(prod, eq, qu, n_units=8)     # warm the jit
+    jx.reset_stats()
+    block = jx.transform_and_rollup(prod, eq, qu, n_units=8)
+    assert jx.op_dispatches == 1 and jx.host_syncs == 0
+    block.start_host_copy()                  # async D2H: still no sync
+    assert jx.host_syncs == 0
+    block.to_host()
+    block.rollup_host()
+    assert jx.host_syncs == 1                # the load boundary's one sync
+    block.to_host()
+    assert jx.host_syncs == 1                # cached, no second round trip
+    for name in ("numpy", "pallas"):
+        be = get_backend(name)
+        be.reset_stats()
+        b = be.transform_and_rollup(prod, eq, qu, n_units=8)
+        assert be.host_syncs == 0            # device-resident until load
+        assert be.op_dispatches >= 1
+        b.to_host()
+        assert be.host_syncs == (1 if be.device else 0)
+
+
+def test_worker_step_single_round_trip():
+    """End-to-end counter check through the real worker step: one fused
+    dispatch and one host sync per process_operational step on jax."""
+    pipe = _pipeline("jax", n_records=200, n_workers=1, n_partitions=4)
+    pipe.step(max_records_per_partition=25)              # warm the buckets
+    be = pipe.backend
+    be.reset_stats()
+    done = pipe.step(max_records_per_partition=25)
+    assert done > 0
+    assert be.op_dispatches == 1 and be.host_syncs == 1
+
+
+def test_cache_snapshot_lookup_all_backends():
+    """Regression: CacheSnapshot.__slots__ omitted ``_backend`` and
+    __init__ never assigned it, so ``snapshot.backend`` / ``lookup()``
+    raised AttributeError on first use. Exercise the full lookup path on
+    every backend."""
+    rng = np.random.default_rng(13)
+    for name in BACKENDS:
+        be = get_backend(name)
+        tbl = InMemoryTable(512, backend=name)
+        keys = rng.choice(10**6, 100, replace=False).astype(np.int64)
+        payload = rng.normal(size=(100, 8)).astype(np.float32)
+        tbl.upsert(keys, payload, np.arange(100, dtype=np.int64))
+        snap = tbl.snapshot_view(be.device)
+        assert snap.backend.name == name
+        queries = np.concatenate([keys[:30], keys[:10] + 10**7])
+        vals, found, txn = snap.lookup(queries)
+        assert found[:30].all() and not found[30:].any()
+        np.testing.assert_allclose(vals[:30], payload[:30], atol=1e-5)
+        np.testing.assert_array_equal(txn[:30], np.arange(30))
+
+
+def test_pad_bucket_mutable_never_aliases():
+    """Regression: a power-of-two-sized input came back aliased and
+    PallasBackend.segment_reduce's pad-marking write scribbled on the
+    caller's facts."""
+    x = np.arange(32, dtype=np.float32).reshape(8, 4)
+    padded = ComputeBackend._pad_bucket(x, floor=8, mutable=True)
+    assert padded is not x and not np.shares_memory(padded, x)
+    np.testing.assert_array_equal(padded, x)
+    # read-only fast path may alias (documented), padding never does
+    grown = ComputeBackend._pad_bucket(x, floor=16, mutable=False)
+    assert not np.shares_memory(grown, x) and len(grown) == 16
+
+
+def test_pallas_segment_reduce_does_not_mutate_input():
+    rng = np.random.default_rng(14)
+    n = 256                                  # exactly one pallas bucket
+    facts = np.zeros((n, 10), np.float32)
+    facts[:, 0] = rng.integers(0, 4, n)
+    facts[:, 3:7] = rng.uniform(0, 1, (n, 4)).astype(np.float32)
+    facts[:, 9] = 1.0
+    before = facts.tobytes()
+    agg = get_backend("pallas").segment_reduce(facts, 4)
+    assert facts.tobytes() == before         # input untouched
+    np.testing.assert_allclose(agg, _segment_reduce_np(facts, 4),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_warehouse_kpi_running_matches_rescan():
+    """The fused rollups accumulated at load time reproduce the full
+    rescan — and gap honestly (None) when any load lacked a rollup."""
+    pipe = _pipeline("jax", n_records=400, n_workers=2, n_partitions=4)
+    pipe.run_to_completion()
+    running = pipe.warehouse.kpi_running()
+    assert running is not None
+    scan = pipe.warehouse.kpi_rollup(pipe.cfg.n_business_keys,
+                                     backend="numpy")
+    np.testing.assert_array_equal(running[:, 4], scan[:, 4])  # counts exact
+    np.testing.assert_allclose(running, scan, rtol=1e-4, atol=1e-4)
+    # a rollup-less load (legacy path) invalidates the O(1) aggregate
+    pipe.warehouse.load(0, np.zeros((3, 10), np.float32))
+    assert pipe.warehouse.kpi_running() is None
 
 
 def test_kpi_rollup_matches_query_oee():
