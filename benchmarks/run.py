@@ -57,6 +57,12 @@ def main() -> None:
     from benchmarks import dispatch_overhead as DO
     emit("dispatch", DO.summary(quick=args.quick))
 
+    # skew-aware adaptive partitioning: worker-load imbalance + surgical
+    # cache retention under a Zipf-skewed stream (full sweep:
+    # python -m benchmarks.skewed_load -> BENCH_skew.json)
+    from benchmarks import skewed_load as SK
+    emit("skew", SK.summary(quick=args.quick))
+
     # roofline summary (if the dry-run matrix has been produced)
     try:
         from benchmarks.roofline import load_cells, roofline_fraction

@@ -9,6 +9,7 @@ while the cluster is mid-run, each stamped with its report staleness.
 
     PYTHONPATH=src python examples/steelworks_etl.py
 """
+import dataclasses
 import time
 
 import numpy as np
@@ -108,6 +109,53 @@ def main():
     assert running is not None and np.allclose(running, full, atol=1e-2)
     print(f"running KPI aggregate (O(1), fused rollups) matches the "
           f"full rescan over {pipe.warehouse.rows_loaded} facts")
+
+    # ---- skewed shift: one hot caster + many cold finishing lines.
+    # Real plants are Zipf-skewed — the caster emits most events. Static
+    # hash%n pins its keys to fixed partitions (one worker drowns, the
+    # rest idle); the skew-aware strategy watches the broker's per-key
+    # load and repartitions MID-RUN: hot hash ranges split away, caches
+    # migrate surgically (survivors stay warm), and per-worker load
+    # evens out. Records keep flowing throughout — routing epochs keep
+    # every already-published record readable.
+    skew_cfg = steelworks_config(n_partitions=20, backend="numpy",
+                                 partition_strategy="skew")
+    skew_cfg = dataclasses.replace(skew_cfg, n_business_keys=100,
+                                   buffer_capacity=32768)
+    src2 = SourceDatabase()
+    sampler2 = SteelworksSampler(skew_cfg, SamplerConfig(
+        records_per_table=1000, n_equipment=100, zipf_s=1.2))
+    sampler2.generate(src2)
+    pipe_sk = DODETLPipeline(skew_cfg, src2, n_workers=4)
+    pipe_sk.extract()
+    pipe_sk.bootstrap_caches()
+
+    def shares(counts):
+        tot = max(sum(counts.values()), 1)
+        return " ".join(f"{w}:{100 * c / tot:.0f}%"
+                        for w, c in sorted(counts.items()))
+
+    for _ in range(3):                   # shift starts under equal ranges
+        sampler2.generate(src2, n_per_table=1000, tables=("production",))
+        pipe_sk.extract()
+        pipe_sk.step(200)
+    pre = {w.name: w.metrics.records for w in pipe_sk.workers}
+    mig = pipe_sk.repartition()          # coordinator reads its own load
+    for _ in range(5):                   # metrics, splits the hot ranges
+        sampler2.generate(src2, n_per_table=1000, tables=("production",))
+        pipe_sk.extract()
+        pipe_sk.step(200)
+    pipe_sk.run_to_completion()
+    post = {w.name: w.metrics.records - pre[w.name]
+            for w in pipe_sk.workers}
+    print(f"skewed shift (hot caster, Zipf 1.2): per-worker share "
+          f"before adaptation  {shares(pre)}")
+    print(f"  after skew-aware repartition (epoch {mig['epoch']})      "
+          f"{shares(post)}")
+    print(f"  surgical cache migration kept "
+          f"{100 * mig['cache_retention']:.0f}% of cached master rows "
+          f"({mig['retained_rows']} retained, {mig['gained_rows']} dumped "
+          f"for gained keys only)")
 
     # ---- §4.1.4: the ISA-95 generalized model costs throughput
     t0 = time.perf_counter()

@@ -33,6 +33,9 @@ class ETLConfig:
     seed: int = 0
     backend: str = ""            # compute backend: "numpy" | "jax" | "pallas"
                                  # ("" = DODETL_BACKEND env var, else "jax")
+    partition_strategy: str = "static"   # key->partition routing strategy:
+                                 # "static" (hash%n), "consistent" (vnode
+                                 # ring), "skew" (load-adaptive ranges)
     # --- concurrent runtime (repro.runtime.cluster.ConcurrentCluster) ---
     handoff_depth: int = 4       # bounded hand-off queue slots between the
                                  # ingest -> transform -> load worker stages
@@ -54,7 +57,8 @@ class ETLConfig:
 
 
 def steelworks_config(n_partitions: int = 20, complex_model: bool = False,
-                      backend: str = "") -> ETLConfig:
+                      backend: str = "",
+                      partition_strategy: str = "static") -> ETLConfig:
     """The paper's steelworks deployment (§4).
 
     ``complex_model=True`` approximates the ISA-95 production workload of
@@ -85,7 +89,8 @@ def steelworks_config(n_partitions: int = 20, complex_model: bool = False,
             for part in ("segment", "event", "detail")
         )
     return ETLConfig(tables=tables, n_partitions=n_partitions,
-                     n_business_keys=n_partitions, backend=backend)
+                     n_business_keys=n_partitions, backend=backend,
+                     partition_strategy=partition_strategy)
 
 
 # KPI definitions (paper §4): OEE = availability * performance * quality.

@@ -29,7 +29,9 @@ from repro.core.pipeline import DODETLPipeline, StreamProcessorWorker  # noqa: F
 from repro.core.baseline import BaselineStreamProcessor  # noqa: F401
 from repro.core.partitioning import (  # noqa: F401
     PartitionAssignment,
+    PartitionStrategy,
+    RoutingTable,
+    get_strategy,
     hash_key,
     partition_of,
-    split_by_partition,
 )

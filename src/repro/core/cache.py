@@ -190,6 +190,48 @@ class InMemoryTable:
             self._dirty.update(("values", "txn"))
         self.version += 1
 
+    def retain_only(self, keep_bkeys: np.ndarray,
+                    bk_col: int = 1) -> Tuple[int, int]:
+        """Surgical cache migration, drop side: keep ONLY the rows whose
+        business key (``values[:, bk_col]`` — every master payload carries
+        its equipment/business key there) is in ``keep_bkeys``; rows of
+        moved-away key ranges are dropped. Returns (kept, dropped) row
+        counts.
+
+        Open addressing cannot delete in place (an emptied slot would cut
+        the probe chains of keys hashed past it, making them invisible to
+        the bounded device probe), so the retained rows are re-inserted
+        through the vectorized ``upsert`` — still a pure LOCAL operation:
+        unlike the paper's cache-reset trigger it never touches the broker
+        snapshot, which is exactly what makes a rebalance keep its
+        survivors warm. The watermark is preserved (it tracks the master
+        STREAM, not this worker's slice of it)."""
+        live = np.nonzero(self.keys != -1)[0]
+        if not len(live):
+            return 0, 0
+        bks = self.values[live, bk_col].astype(np.int64)
+        keep_sorted = np.unique(np.asarray(keep_bkeys, np.int64))
+        from repro.core.partitioning import isin_sorted
+        mask = isin_sorted(keep_sorted, bks)
+        kept = live[mask]
+        dropped = len(live) - len(kept)
+        if dropped == 0:
+            return len(kept), 0
+        keys = self.keys[kept].astype(np.int64)   # fancy index: copies
+        vals = self.values[kept]
+        txns = self.txn[kept]
+        watermark = self.watermark
+        self.keys[:] = -1
+        self.values[:] = 0
+        self.txn[:] = 0
+        self.n_rows = 0
+        self._dirty = {"keys", "values", "txn"}
+        self.version += 1
+        if len(kept):
+            self.upsert(keys, vals, txns)
+        self.watermark = watermark
+        return len(kept), dropped
+
     def reset_from_snapshot(self, row_keys: np.ndarray, payloads: np.ndarray,
                             txn_times: np.ndarray) -> float:
         """Paper's cache-reset trigger: wipe + re-dump compacted snapshot.

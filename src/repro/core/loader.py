@@ -79,10 +79,12 @@ class StarSchemaWarehouse:
 
     def _commit(self, block: np.ndarray,
                 event_times: Optional[np.ndarray],
-                rollup: Optional[np.ndarray] = None) -> None:
+                rollup: Optional[np.ndarray] = None,
+                routing_epoch: Optional[int] = None) -> None:
         """Lock-held: record the block in the committed chunk log, bump the
         commit sequence, fold the fused rollup into the running KPI
-        aggregate, publish the delta."""
+        aggregate, publish the delta (stamped with the routing epoch the
+        records were processed under, for migration observability)."""
         self._chunk_log.append(block)
         self.commit_seq += 1
         if rollup is not None:
@@ -95,12 +97,14 @@ class StarSchemaWarehouse:
         else:
             self._kpi_gap_rows += len(block)
         if self._serving is not None:
-            self._serving.publish(block, event_times)
+            self._serving.publish(block, event_times,
+                                  routing_epoch=routing_epoch)
 
     # -------------------------------------------------------------- load paths
     def load(self, partition: int, facts: np.ndarray,
              event_times: Optional[np.ndarray] = None,
-             rollup: Optional[np.ndarray] = None) -> None:
+             rollup: Optional[np.ndarray] = None,
+             routing_epoch: Optional[int] = None) -> None:
         """Per-partition append (the caller already split by partition)."""
         if len(facts) == 0:
             return
@@ -108,11 +112,12 @@ class StarSchemaWarehouse:
         with self._lock:
             self.rows_loaded += len(facts)
             self.load_calls += 1
-            self._commit(facts, event_times, rollup)
+            self._commit(facts, event_times, rollup, routing_epoch)
 
     def load_partitioned(self, facts: np.ndarray, n_partitions: int,
                          event_times: Optional[np.ndarray] = None,
-                         rollup: Optional[np.ndarray] = None) -> int:
+                         rollup: Optional[np.ndarray] = None,
+                         routing_epoch: Optional[int] = None) -> int:
         """Group a coalesced fact block by business-key partition (fact
         col 0 IS the business key — each partition's rows land contiguous,
         'executing its query statements independently') and commit it as
@@ -120,7 +125,15 @@ class StarSchemaWarehouse:
         commit-sequence bump and serving delta land under ONE acquisition
         (concurrent workers' load stages share this lock, so per-partition
         locking would contend ~n_partitions times per dispatch — and a
-        reader pinning a view can never see half a load)."""
+        reader pinning a view can never see half a load).
+
+        The chunk layout deliberately uses the STABLE static hash, never
+        the queue's adaptive routing table: the grouping of one fact set
+        is then invariant to routing epochs, so serving-view folds (whose
+        segment ids come from fact columns alone — partition-stable by
+        construction) and the chunk log replay stay byte-identical across
+        repartitions. ``routing_epoch`` is carried as a stamp for
+        observability only; it never influences the layout."""
         n = len(facts)
         if n == 0:
             return 0
@@ -134,7 +147,7 @@ class StarSchemaWarehouse:
         with self._lock:
             self.rows_loaded += n
             self.load_calls += n_hit     # one logical append per partition
-            self._commit(sorted_facts, sorted_times, rollup)
+            self._commit(sorted_facts, sorted_times, rollup, routing_epoch)
         return n
 
     # -------------------------------------------------------------- read paths

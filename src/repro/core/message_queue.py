@@ -36,7 +36,7 @@ from typing import Dict, Iterable, List, Optional, Tuple
 
 import numpy as np
 
-from repro.core.partitioning import partition_of
+from repro.core.partitioning import RoutingTable
 from repro.core.records import RecordBatch
 
 
@@ -93,6 +93,15 @@ class Partition:
 
 
 class Topic:
+    """Partitioned log + the topic's ROUTING state: a versioned
+    ``RoutingTable`` decides which partition a published record lands in.
+    Epoch changes are append-only history — records published under epoch
+    E stay readable in the partitions E chose (partition logs never move);
+    a historical epoch is *live* until every partition's consumer has
+    committed past the high watermark recorded at the switch (its
+    ``horizons``), at which point ``retire_epochs`` drops it and workers
+    may release the key ranges only that epoch routed to them."""
+
     def __init__(self, cfg: TopicConfig):
         self.cfg = cfg
         self.partitions = [Partition() for _ in range(cfg.n_partitions)]
@@ -100,6 +109,20 @@ class Topic:
         self._compact: Dict[int, Tuple[int, np.ndarray, int]] = {}
         self._compact_view = None    # lazily materialized columnar snapshot
         self._lock = threading.Lock()   # serializes appends + compaction
+        self.routing = RoutingTable.static(cfg.n_partitions)
+        # ((table, horizons), ...): still-live superseded epochs, newest
+        # last; replaced wholesale (copy-on-write) so readers are lock-free
+        self._history: Tuple[Tuple[RoutingTable, Tuple[int, ...]], ...] = ()
+        # observed publish load: per partition and per business key — the
+        # coordinator's input to SkewAwareStrategy.rebalanced_table.
+        # Business keys are dense small ints in this deployment, so the
+        # per-key counter is a lazily grown array updated with ONE
+        # np.add.at per publish (a Python dict loop here would run under
+        # the publish lock on every CDC extraction)
+        self.partition_pub = np.zeros(cfg.n_partitions, np.int64)
+        self._key_loads = np.zeros(0, np.int64)
+        self._untracked_key_load = 0      # sparse/negative keys: not used
+                                          # for skew splits, but counted
 
     def publish(self, batch: RecordBatch) -> None:
         if not len(batch):
@@ -111,8 +134,20 @@ class Topic:
 
     def _publish_locked(self, batch: RecordBatch, key: str) -> None:
         for p, part_batch in batch.split_by_partition(
-                self.cfg.n_partitions, key=key):
+                self.cfg.n_partitions, key=key, router=self.routing):
             self.partitions[p].append(part_batch)
+            self.partition_pub[p] += len(part_batch)
+        if key == "business_key" and len(batch):
+            ks = batch.business_key
+            lo, hi = int(ks.min()), int(ks.max())
+            if lo >= 0 and hi < (1 << 20):
+                if hi >= len(self._key_loads):
+                    grown = np.zeros(hi + 1, np.int64)
+                    grown[:len(self._key_loads)] = self._key_loads
+                    self._key_loads = grown
+                np.add.at(self._key_loads, ks, 1)
+            else:
+                self._untracked_key_load += len(ks)
         if self.cfg.compacted:
             # within-batch winner per row key first (latest txn_time, arrival
             # order breaking ties — same rule as the per-record loop), then
@@ -175,6 +210,76 @@ class Topic:
 
     def high_watermark(self, partition: int) -> int:
         return self.partitions[partition].length
+
+    # -------------------------------------------------------- routing epochs
+    def set_routing(self, table: RoutingTable) -> None:
+        """Switch to a new routing epoch. Under the publish lock, so the
+        per-partition horizons (lengths at the switch) are exact: every
+        record below a horizon was routed by the OLD table, everything at
+        or above it by the new one. The old epoch joins the live history
+        unless its partitions were still empty (nothing to drain)."""
+        assert table.n_partitions <= len(self.partitions), \
+            "routing table wider than the topic (expand first)"
+        with self._lock:
+            if table.epoch == self.routing.epoch and \
+                    table.kind == self.routing.kind:
+                return
+            horizons = tuple(p.length for p in self.partitions)
+            if any(horizons):
+                self._history = self._history + ((self.routing, horizons),)
+            self.routing = table
+
+    def live_tables(self) -> Tuple[RoutingTable, ...]:
+        """Current table plus every superseded epoch still draining —
+        the union a worker's business-key filter must cover so records
+        published under an old epoch keep finding their master rows.
+
+        Lock-free, so the read ORDER matters against ``set_routing``
+        (history append, THEN routing swap): reading ``routing`` first
+        can only over-report (the pre-swap table shows up both as
+        current and, post-append, in history — callers dedupe by epoch);
+        the reverse order could miss the just-superseded epoch
+        entirely."""
+        cur = self.routing                # read BEFORE history (see above)
+        hist = self._history              # atomic tuple read, no lock
+        return tuple(t for t, _ in hist) + (cur,)
+
+    def routing_signature(self) -> Tuple[int, int]:
+        """(current epoch, live history length) — memo invalidation key
+        for anything derived from ``live_tables``."""
+        return (self.routing.epoch, len(self._history))
+
+    def retire_epochs(self, committed: Dict[int, int]) -> bool:
+        """Drop historical epochs whose records are all committed:
+        ``committed[p]`` is the owning consumer group's committed offset
+        for partition p. Returns True if anything retired."""
+        with self._lock:
+            keep = tuple(
+                (t, hz) for t, hz in self._history
+                if any(committed.get(p, 0) < h for p, h in enumerate(hz)))
+            retired = len(keep) != len(self._history)
+            self._history = keep
+        return retired
+
+    def load_stats(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """(per-partition publish counts, observed business keys, counts)
+        — the skew strategy's rebalance input."""
+        with self._lock:
+            parts = self.partition_pub.copy()
+            keys = np.nonzero(self._key_loads)[0].astype(np.int64)
+            counts = self._key_loads[keys]
+        return parts, keys, counts
+
+    def expand(self, n_partitions: int) -> None:
+        """Elastic scale event: append empty partitions (existing logs
+        never move — only a routing-table change sends keys their way)."""
+        with self._lock:
+            add = n_partitions - len(self.partitions)
+            assert add >= 0, "partitions never shrink (logs are durable)"
+            self.partitions.extend(Partition() for _ in range(add))
+            self.partition_pub = np.concatenate(
+                [self.partition_pub, np.zeros(add, np.int64)])
+            self.cfg.n_partitions = n_partitions
 
 
 class MessageQueue:

@@ -22,8 +22,8 @@ from repro.core.cdc import SourceDatabase
 from repro.core.listener import ChangeTracker
 from repro.core.message_queue import MessageQueue
 from repro.core.loader import StarSchemaWarehouse
-from repro.core.partitioning import (PartitionAssignment, isin_sorted,
-                                     partition_of)
+from repro.core.partitioning import (PartitionAssignment, RoutingTable,
+                                     get_strategy, isin_sorted, partition_of)
 from repro.core.records import RecordBatch
 from repro.core.transformer import DataTransformer
 
@@ -36,6 +36,57 @@ class StageMetrics:
     @property
     def rate(self) -> float:
         return self.records / self.wall_s if self.wall_s > 0 else 0.0
+
+
+@dataclasses.dataclass
+class CacheMigrationStats:
+    """One surgical cache migration: what survived, what moved, what the
+    (now gained-keys-only) snapshot dump cost."""
+
+    retained_rows: int = 0       # master rows kept across the migration
+    dropped_rows: int = 0        # rows of moved-away key ranges
+    gained_rows: int = 0         # rows dumped for newly owned keys
+    dump_s: float = 0.0
+    prev_keys: int = 0
+    new_keys: int = 0
+    gained_keys: int = 0
+
+    @property
+    def retention(self) -> float:
+        """Fraction of pre-migration cache rows retained (1.0 when the
+        cache was empty — nothing to lose)."""
+        total = self.retained_rows + self.dropped_rows
+        return self.retained_rows / total if total else 1.0
+
+    def merge(self, other: "CacheMigrationStats") -> "CacheMigrationStats":
+        return CacheMigrationStats(
+            self.retained_rows + other.retained_rows,
+            self.dropped_rows + other.dropped_rows,
+            self.gained_rows + other.gained_rows,
+            self.dump_s + other.dump_s,
+            self.prev_keys + other.prev_keys,
+            self.new_keys + other.new_keys,
+            self.gained_keys + other.gained_keys)
+
+
+def migration_summary(epoch: int, moved_key_fraction: float,
+                      stats: CacheMigrationStats,
+                      initial_rows: int) -> Dict[str, float]:
+    """One migration's user-facing stats dict, shared by the sequential
+    and concurrent coordinators. ``cache_retention`` is computed against
+    the PRE-migration row count: a multi-phase migration (reroute, then
+    ownership rebalance) runs ``migrate_caches`` more than once per
+    worker, and summing the per-phase ``retained_rows`` would count every
+    surviving row once per phase — only the drops are additive."""
+    retained = max(initial_rows - stats.dropped_rows, 0)
+    retention = retained / initial_rows if initial_rows else 1.0
+    return {"epoch": epoch,
+            "moved_key_fraction": round(moved_key_fraction, 4),
+            "cache_retention": round(retention, 4),
+            "retained_rows": retained,
+            "dropped_rows": stats.dropped_rows,
+            "gained_rows": stats.gained_rows,
+            "dump_s": round(stats.dump_s, 6)}
 
 
 class StreamProcessorWorker:
@@ -56,7 +107,13 @@ class StreamProcessorWorker:
         self.warehouse = warehouse
         self.backend = get_backend(backend or cfg.backend or None)
         self._partitions: List[int] = []
-        self._bkeys_memo: Dict[int, np.ndarray] = {}
+        self._bkeys_memo: Dict[int, tuple] = {}   # n_keys -> (sig, keys)
+        # routing-epoch awareness: the pipeline points these at its
+        # operational topics so the worker's business-key filter covers the
+        # UNION of live routing epochs (records published under a draining
+        # old epoch keep finding their master rows). None = legacy static.
+        self._routing_topics: Optional[List[str]] = None
+        self._pending_tables: tuple = ()   # tables acked but not yet switched
         self.equipment = InMemoryTable(cfg.cache_slots, cfg.cache_row_width,
                                        backend=self.backend)
         self.quality = InMemoryTable(cfg.cache_slots, cfg.cache_row_width,
@@ -84,16 +141,56 @@ class StreamProcessorWorker:
         self._partitions = list(value)
         self._bkeys_memo.clear()     # reassignment invalidates the key memo
 
+    def set_pending_tables(self, tables) -> None:
+        """Routing tables the coordinator has announced but not yet
+        switched publishers to (phase 1 of an epoch migration): the
+        business-key filter covers them so the worker is ready before the
+        first record routed by the new epoch exists."""
+        self._pending_tables = tuple(tables)
+
+    def _routing_sig(self):
+        """Memo key: changes whenever a routing epoch advances/retires or
+        a pending (acked-but-unswitched) table appears."""
+        if self._routing_topics is None:
+            return None
+        return (tuple(self.queue.topics[t].routing_signature()
+                      for t in self._routing_topics),
+                tuple(t.epoch for t in self._pending_tables))
+
+    def _live_tables(self) -> List[RoutingTable]:
+        """Routing tables whose records this worker may still encounter:
+        every operational topic's live epochs plus any pending table the
+        coordinator has announced but not yet switched to (operational
+        topics share one routing timeline, so tables dedupe by epoch)."""
+        tables: Dict[int, RoutingTable] = {}
+        for t in self._routing_topics:
+            for tab in self.queue.topics[t].live_tables():
+                tables[tab.epoch] = tab
+        for tab in self._pending_tables:
+            tables[tab.epoch] = tab
+        return list(tables.values())
+
     def assigned_business_keys(self, n_business_keys: int) -> np.ndarray:
-        """Sorted i64 array of this worker's business keys, memoized until
-        the partition assignment changes (no per-pump set rebuilds)."""
-        memo = self._bkeys_memo.get(n_business_keys)
-        if memo is None:
-            keys = np.arange(n_business_keys, dtype=np.int64)
+        """Sorted i64 array of this worker's business keys — every key any
+        LIVE routing epoch maps into an owned partition — memoized until
+        the partition assignment or a routing epoch changes (no per-pump
+        set rebuilds)."""
+        sig = self._routing_sig()
+        entry = self._bkeys_memo.get(n_business_keys)
+        if entry is not None and entry[0] == sig:
+            return entry[1]
+        keys = np.arange(n_business_keys, dtype=np.int64)
+        if self._routing_topics is None:     # legacy static fallback
             parts = partition_of(keys, self.cfg.n_partitions)
             mask = np.isin(parts, np.asarray(self._partitions, np.int32))
-            memo = keys[mask]        # arange slice => already sorted
-            self._bkeys_memo[n_business_keys] = memo
+        else:
+            mask = np.zeros(n_business_keys, bool)
+            owned = np.asarray(sorted(self._partitions), np.int64)
+            for tab in self._live_tables():
+                mask |= isin_sorted(owned,
+                                    tab.partition_of(keys).astype(np.int64))
+        memo = keys[mask]            # arange slice => already sorted
+        self._bkeys_memo[n_business_keys] = (sig, memo)
         return memo
 
     def _filter_assigned(self, batch: RecordBatch) -> RecordBatch:
@@ -126,6 +223,40 @@ class StreamProcessorWorker:
                 join_keys = rks
             total += cache.reset_from_snapshot(join_keys, pls, tts)
         return total
+
+    def migrate_caches(self, master_topics: Dict[str, str],
+                       n_business_keys: int,
+                       prev_bkeys: np.ndarray) -> CacheMigrationStats:
+        """SURGICAL replacement for the reset-everything trigger: retain
+        cached master rows for business keys still owned under any live
+        routing epoch, drop only the moved-away ranges, and dump from the
+        compacted master topics ONLY the keys gained since ``prev_bkeys``
+        — so a survivor that merely gains (or loses) a slice of the key
+        space keeps its cache warm instead of re-dumping the world (the
+        post-rebalance throughput crater PR 2 measured)."""
+        t0 = time.perf_counter()
+        new_bkeys = self.assigned_business_keys(n_business_keys)
+        gained = np.setdiff1d(new_bkeys, prev_bkeys)
+        stats = CacheMigrationStats(prev_keys=len(prev_bkeys),
+                                    new_keys=len(new_bkeys),
+                                    gained_keys=len(gained))
+        for cache, topic_name in (
+                (self.equipment, master_topics["equipment"]),
+                (self.quality, master_topics["quality"])):
+            kept, dropped = cache.retain_only(new_bkeys)
+            stats.retained_rows += kept
+            stats.dropped_rows += dropped
+            if len(gained):
+                rks, pls, tts = self.queue.topics[topic_name].snapshot(gained)
+                if len(rks):
+                    if cache is self.quality:
+                        join_keys = pls[:, 3].astype(np.int64)
+                    else:
+                        join_keys = pls[:, 1].astype(np.int64)
+                    cache.upsert(join_keys, pls, tts)
+                    stats.gained_rows += len(rks)
+        stats.dump_s = time.perf_counter() - t0
+        return stats
 
     # ----------------------------------------------------- master ingestion
     def pump_master(self, topic: str, cache: InMemoryTable,
@@ -185,8 +316,9 @@ class StreamProcessorWorker:
             return 0
         block.start_host_copy()          # D2H rides behind the compute
         facts, _ = self.transformer.finish(block, merged)
-        done = self.warehouse.load_partitioned(facts, self.cfg.n_partitions,
-                                               rollup=block.rollup_host())
+        done = self.warehouse.load_partitioned(
+            facts, self.cfg.n_partitions, rollup=block.rollup_host(),
+            routing_epoch=self.queue.topics[topic].routing.epoch)
         self.metrics.records += done
         self.metrics.wall_s += time.perf_counter() - t0
         return done
@@ -204,16 +336,28 @@ class DODETLPipeline:
         self.queue = MessageQueue()
         self.tracker = ChangeTracker(cfg, source.log, self.queue)
         self.warehouse = StarSchemaWarehouse(backend=self.backend)
-        self.workers = [
-            StreamProcessorWorker(f"w{i}", cfg, self.queue, self.warehouse,
-                                  join_depth, backend=self.backend)
-            for i in range(n_workers)]
-        self.assignment = PartitionAssignment(
-            cfg.n_partitions, [w.name for w in self.workers])
-        self._apply_assignment()
         self.operational_topics = [self.tracker.topic_of(t.name)
                                    for t in cfg.operational_tables]
         self.master_topic_map = self._master_topics()
+        # pluggable partitioning: operational topics share ONE routing
+        # timeline produced by the configured strategy ("static" keeps the
+        # exact legacy hash%n behavior at epoch 0)
+        self.strategy = get_strategy(cfg.partition_strategy)
+        table = self.strategy.initial_table(cfg.n_partitions)
+        for t in self.operational_topics:
+            self.queue.topics[t].set_routing(table)
+        self.workers = [self._new_worker(f"w{i}", join_depth)
+                        for i in range(n_workers)]
+        self.assignment = PartitionAssignment(
+            cfg.n_partitions, [w.name for w in self.workers])
+        self._apply_assignment()
+
+    def _new_worker(self, name: str,
+                    join_depth: int = 1) -> StreamProcessorWorker:
+        w = StreamProcessorWorker(name, self.cfg, self.queue, self.warehouse,
+                                  join_depth, backend=self.backend)
+        w._routing_topics = self.operational_topics
+        return w
 
     def _master_topics(self) -> Dict[str, str]:
         """Logical master role -> topic. The simple schema has 'equipment'
@@ -270,15 +414,134 @@ class DODETLPipeline:
                 break
         return total
 
+    # ---------------------------------------------------- routing epochs
+    def current_routing(self) -> RoutingTable:
+        """The operational topics' shared routing table (current epoch)."""
+        return self.queue.topics[self.operational_topics[0]].routing
+
+    def _committed_by_partition(self, topic: str) -> Dict[int, int]:
+        group_of = {w.name: w.group for w in self.workers}
+        out: Dict[int, int] = {}
+        for p, owner in self.assignment.assignment.items():
+            g = group_of.get(owner)
+            out[p] = self.queue.committed(g, topic, p) if g else 0
+        return out
+
+    def retire_routing(self) -> bool:
+        """Drop routing epochs whose records are fully committed; when any
+        retire, buffered late records are re-homed so none starves at a
+        worker about to release the retired epoch's key ranges."""
+        retired = False
+        for t in self.operational_topics:
+            retired |= self.queue.topics[t].retire_epochs(
+                self._committed_by_partition(t))
+        if retired:
+            self._rehome_buffers()
+        return retired
+
+    def _rehome_buffers(self) -> None:
+        """Re-home every buffered late record to its business key's owner
+        under the CURRENT routing epoch (replicated-store semantics)."""
+        merged = RecordBatch.concat([w.buffer.drain() for w in self.workers])
+        if not len(merged):
+            return
+        parts = self.current_routing().partition_of(
+            merged.business_key).astype(np.int64)
+        owner_of = self.assignment.assignment
+        for w in self.workers:
+            owned = np.asarray(sorted(
+                p for p, o in owner_of.items() if o == w.name), np.int64)
+            w.buffer.push(merged.filter(isin_sorted(owned, parts)))
+
+    def backlog_weights(self) -> np.ndarray:
+        """Per-partition UNDRAINED record counts (high watermark minus the
+        owner's committed offset, summed over operational topics). The
+        backlog sits wherever its publication epoch routed it — a
+        load-aware reassignment must weigh it in, or the old hot
+        partitions' drain work lands on one worker."""
+        w = np.zeros(self.assignment.n_partitions)
+        for t in self.operational_topics:
+            committed = self._committed_by_partition(t)
+            parts = self.queue.topics[t].partitions
+            for p in range(min(len(parts), len(w))):
+                w[p] += max(0, parts[p].length - committed.get(p, 0))
+        return w
+
+    def observed_loads(self):
+        """(per-partition publish counts, business keys, per-key counts)
+        aggregated over the operational topics — the skew strategy's
+        input, straight from the broker's publish counters."""
+        part_loads = np.zeros(self.assignment.n_partitions, np.int64)
+        key_tot: Dict[int, int] = {}
+        for t in self.operational_topics:
+            pl, ks, cs = self.queue.topics[t].load_stats()
+            part_loads[:len(pl)] += pl
+            for k, c in zip(ks.tolist(), cs.tolist()):
+                key_tot[k] = key_tot.get(k, 0) + c
+        keys = np.fromiter(key_tot.keys(), np.int64, len(key_tot))
+        counts = np.fromiter(key_tot.values(), np.int64, len(key_tot))
+        return part_loads, keys, counts
+
+    def repartition(self) -> Dict[str, float]:
+        """Adaptive repartition (sequential runtime): observe load → new
+        routing epoch from the strategy → workers pre-migrate caches
+        surgically for the superset of live epochs → topics switch →
+        load-aware sticky partition reassignment with exactly-once offset
+        transfer → buffers re-homed. Returns migration stats."""
+        self.retire_routing()
+        initial_rows = sum(w.equipment.n_rows + w.quality.n_rows
+                           for w in self.workers)
+        part_loads, keys, counts = self.observed_loads()
+        cur = self.current_routing()
+        new_table = self.strategy.rebalanced_table(cur, part_loads,
+                                                   (keys, counts))
+        stats = CacheMigrationStats()
+        moved = 0.0
+        if new_table.epoch != cur.epoch:
+            # phase 1: workers prepare — their key filter grows to the
+            # union of live + pending epochs and caches migrate surgically
+            for w in self.workers:
+                prev = w.assigned_business_keys(self.cfg.n_business_keys)
+                w.set_pending_tables((new_table,))
+                stats = stats.merge(w.migrate_caches(
+                    self.master_topic_map, self.cfg.n_business_keys, prev))
+            # phase 2: atomically switch the publish epoch
+            for t in self.operational_topics:
+                self.queue.topics[t].set_routing(new_table)
+            for w in self.workers:
+                w.set_pending_tables(())
+            moved = cur.moved_fraction(
+                new_table, np.arange(self.cfg.n_business_keys))
+        # phase 3: rebalance partition ownership, transferring offsets
+        # exactly-once. Weight = undrained backlog (sitting wherever its
+        # publication epoch routed it) + expected future arrivals (the
+        # observed key rates mapped through the NEW table)
+        weights = self.backlog_weights()
+        if len(keys):
+            np.add.at(weights,
+                      self.current_routing().partition_of(keys), counts)
+        stats = stats.merge(self._rebalance_and_transfer(
+            list(self.workers), weights=weights, surgical=True))
+        self._rehome_buffers()
+        return migration_summary(self.current_routing().epoch, moved,
+                                 stats, initial_rows)
+
     # ------------------------------------------------------ fault tolerance
-    def _rebalance_and_transfer(self, prior_workers) -> float:
+    def _rebalance_and_transfer(self, prior_workers, weights=None,
+                                surgical: bool = False) -> CacheMigrationStats:
         """Reassign partitions across the current worker set; every
         partition whose owner changed transfers its committed offset to the
         new owner's consumer group (exactly-once handoff) and the new owner
-        fires the cache-reset trigger (paper §3.2). Returns re-dump secs."""
+        fires the cache-migration trigger (paper §3.2): the legacy full
+        snapshot re-dump by default, the surgical retain+gained-only dump
+        when ``surgical``. Returns aggregated migration stats (``dump_s``
+        is the Fig. 4 re-dump cost)."""
+        nbk = self.cfg.n_business_keys
+        prev_bkeys = {w.name: w.assigned_business_keys(nbk)
+                      for w in self.workers} if surgical else {}
         old_owner = {p: w for p, w in self.assignment.assignment.items()}
         old_groups = {w.name: w.group for w in prior_workers}
-        self.assignment.rebalance([w.name for w in self.workers])
+        self.assignment.rebalance([w.name for w in self.workers], weights)
         self._apply_assignment()
         for topic in self.operational_topics:
             for p, new_name in self.assignment.assignment.items():
@@ -293,11 +556,16 @@ class DODETLPipeline:
                 own = self.queue.committed(new_w.group, topic, p)
                 if committed > own:
                     self.queue.commit(new_w.group, topic, p, committed - own)
-        redump = 0.0
+        stats = CacheMigrationStats()
         for w in self.workers:
-            redump += w.reset_caches(self.master_topic_map,
-                                     self.cfg.n_business_keys)
-        return redump
+            if surgical:
+                stats = stats.merge(w.migrate_caches(
+                    self.master_topic_map, nbk,
+                    prev_bkeys.get(w.name, np.zeros(0, np.int64))))
+            else:
+                stats = stats.merge(CacheMigrationStats(
+                    dump_s=w.reset_caches(self.master_topic_map, nbk)))
+        return stats
 
     def fail_workers(self, names: List[str]) -> float:
         """Kill workers; coordinator reassigns; survivors adopt offsets and
@@ -307,7 +575,7 @@ class DODETLPipeline:
         self.workers = [w for w in self.workers if w.name not in names]
         if not self.workers:
             raise RuntimeError("all workers failed")
-        redump = self._rebalance_and_transfer(prior)
+        redump = self._rebalance_and_transfer(prior).dump_s
         for d in dead:
             self.workers[0].buffer.push(d.buffer.drain())
         return redump
@@ -318,10 +586,8 @@ class DODETLPipeline:
         prior = list(self.workers)
         start = len(self.workers)
         for i in range(n):
-            self.workers.append(StreamProcessorWorker(
-                f"w{start + i}", self.cfg, self.queue, self.warehouse,
-                join_depth, backend=self.backend))
-        return self._rebalance_and_transfer(prior)
+            self.workers.append(self._new_worker(f"w{start + i}", join_depth))
+        return self._rebalance_and_transfer(prior).dump_s
 
     def checkpoint(self) -> Dict:
         return {

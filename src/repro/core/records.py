@@ -73,15 +73,18 @@ class RecordBatch:
         return self.take(np.argsort(self.lsn, kind="stable"))
 
     def split_by_partition(self, n_partitions: int,
-                           key: str = "business_key"
+                           key: str = "business_key", router=None
                            ) -> List[Tuple[int, "RecordBatch"]]:
         """Bucket rows by hash partition with ONE stable gather; the
         per-partition batches are zero-copy slices of the reordered columns.
-        Returns [(partition, batch)] for non-empty partitions only."""
+        Returns [(partition, batch)] for non-empty partitions only.
+        ``router`` (a ``partitioning.RoutingTable``) buckets by that
+        routing epoch instead of the static hash."""
         from repro.core.partitioning import partition_bounds
         if not len(self):
             return []
-        order, bounds = partition_bounds(getattr(self, key), n_partitions)
+        order, bounds = partition_bounds(getattr(self, key), n_partitions,
+                                         router)
         cols = [getattr(self, f.name)[order]
                 for f in dataclasses.fields(RecordBatch)]
         return [(p, RecordBatch(*(c[bounds[p]:bounds[p + 1]] for c in cols)))

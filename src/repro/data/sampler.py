@@ -25,6 +25,10 @@ class SamplerConfig:
     n_equipment: int = 20            # business keys (paper: 20 units)
     late_master_frac: float = 0.05   # master rows arriving after their facts
     seed: int = 0
+    zipf_s: float = 0.0              # business-key skew: production events
+                                     # hit unit r with p ∝ 1/r^s (0 = the
+                                     # original uniform round-robin) — a
+                                     # few hot casters emitting most events
 
 
 class SteelworksSampler:
@@ -33,6 +37,23 @@ class SteelworksSampler:
         self.cfg = cfg
         self.rng = np.random.default_rng(cfg.seed)
         self._tick = 1_000
+        # Zipf unit-of-product map: a product line belongs to ONE unit for
+        # the sampler's lifetime (hot casters stay hot across waves), and
+        # the map is prefix-stable so streamed production waves agree with
+        # the master rows generated earlier for the same prod_ids
+        self._zipf_rng = np.random.default_rng((cfg.seed, 0x51))
+        self._unit_of = np.zeros(0, np.int64)
+
+    def _units_for(self, n: int, nunits: int) -> np.ndarray:
+        if self.cfg.zipf_s <= 0:
+            return (np.arange(n, dtype=np.int64) % nunits)
+        if len(self._unit_of) < n:
+            p = 1.0 / np.arange(1, nunits + 1) ** self.cfg.zipf_s
+            extra = self._zipf_rng.choice(nunits, n - len(self._unit_of),
+                                          p=p / p.sum())
+            self._unit_of = np.concatenate(
+                [self._unit_of, extra.astype(np.int64)])
+        return self._unit_of[:n]
 
     def _times(self, n: int) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         start = self._tick + np.arange(n) * 10
@@ -54,7 +75,7 @@ class SteelworksSampler:
         nunits = self.cfg.n_equipment
 
         prod_ids = np.arange(n, dtype=np.int64)
-        equip = (prod_ids % nunits).astype(np.int64)
+        equip = self._units_for(n, nunits)
         t_start, t_end, txn = self._times(n)
         qty = self.rng.uniform(10, 100, n).astype(np.float32)
         speed = self.rng.uniform(1, 5, n).astype(np.float32)
@@ -86,7 +107,10 @@ class SteelworksSampler:
 
         def qual_batch(lo, hi, tshift=0):
             ids = np.arange(lo, hi, dtype=np.int64) + 10_000_000
-            e = (np.arange(lo, hi) % nunits).astype(np.int64)
+            # a quality inspection belongs to the equipment that produced
+            # its prod_id — under Zipf skew that is `equip`, so the row is
+            # cached by the worker that processes the production record
+            e = equip[lo:hi]
             payload = np.stack([
                 ids.astype(np.float32), e.astype(np.float32),
                 (txn[lo:hi] + tshift).astype(np.float32),

@@ -166,11 +166,13 @@ class _Transformed:
 class _Control:
     """Coordinator -> worker control-plane message (applied by the ingest
     stage at its loop head, never mid-fetch)."""
-    kind: str                       # "revoke" | "grant"
+    kind: str                       # "revoke" | "grant" | "reroute"
     partitions: Set[int]
     ack: threading.Event = dataclasses.field(default_factory=threading.Event)
     fetched_at_ack: int = 0         # revoke: in-flight quiesce horizon
-    redump_s: float = 0.0           # grant: cache-reset trigger cost
+    redump_s: float = 0.0           # grant/reroute: cache-migration cost
+    tables: tuple = ()              # reroute: incoming routing tables
+    stats: object = None            # grant/reroute: CacheMigrationStats
 
 
 class WorkerRuntime:
@@ -275,6 +277,7 @@ class WorkerRuntime:
             except queue_mod.Empty:
                 return
             w = self.worker
+            nbk = self.pipe.cfg.n_business_keys
             if msg.kind == "revoke":
                 w.partitions = [p for p in w.partitions
                                 if p not in msg.partitions]
@@ -282,11 +285,30 @@ class WorkerRuntime:
                 msg.ack.set()
             elif msg.kind == "grant":
                 with self.cache_lock:
+                    # SURGICAL cache migration (replaces the reset-
+                    # everything trigger): retain rows for still-owned
+                    # keys, dump only the gained key ranges. In-flight
+                    # work for just-revoked partitions may still probe the
+                    # cache, so moved-away rows are dropped lazily — here,
+                    # at the next key-set change, never mid-revoke.
+                    prev = w.assigned_business_keys(nbk)
                     w.partitions = sorted(set(w.partitions) | msg.partitions)
-                    # the paper's cache-reset trigger: the key set changed
-                    msg.redump_s = w.reset_caches(
-                        self.pipe.master_topic_map,
-                        self.pipe.cfg.n_business_keys)
+                    msg.stats = w.migrate_caches(
+                        self.pipe.master_topic_map, nbk, prev)
+                    msg.redump_s = msg.stats.dump_s
+                msg.ack.set()
+            elif msg.kind == "reroute":
+                with self.cache_lock:
+                    # routing-epoch migration, phase 1: grow the key
+                    # filter to the union of live + incoming epochs and
+                    # migrate the caches surgically BEFORE the coordinator
+                    # switches publishers to the new epoch, so no record
+                    # ever arrives at a worker missing its master rows
+                    prev = w.assigned_business_keys(nbk)
+                    w.set_pending_tables(msg.tables)
+                    msg.stats = w.migrate_caches(
+                        self.pipe.master_topic_map, nbk, prev)
+                    msg.redump_s = msg.stats.dump_s
                 msg.ack.set()
 
     def _buffer_headroom(self) -> int:
@@ -374,9 +396,10 @@ class WorkerRuntime:
         ev = log.event_times(batch.lsn[found])
         # event times ride into the warehouse so an attached serving layer
         # can stamp per-record report staleness on the same CDC clock
-        w.warehouse.load_partitioned(good, self.pipe.cfg.n_partitions,
-                                     event_times=ev,
-                                     rollup=block.rollup_host())
+        w.warehouse.load_partitioned(
+            good, self.pipe.cfg.n_partitions, event_times=ev,
+            rollup=block.rollup_host(),
+            routing_epoch=self.pipe.current_routing().epoch)
         self.latency.add(log.clock() - ev)
         self.records_done += len(good)
         return len(good)
@@ -465,6 +488,8 @@ class ConcurrentCluster:
             for w in pipe.workers}
         self.assignment = pipe.assignment
         self.redump_s_total = 0.0
+        self.last_rebalance_stats = None     # CacheMigrationStats of the
+        self.last_migration: Dict = {}       # last grant wave / repartition
         self._extract_thread: Optional[threading.Thread] = None
         self._stop_extract = threading.Event()
         self._next_worker_idx = len(pipe.workers)
@@ -610,16 +635,20 @@ class ConcurrentCluster:
                     f"quiesce timeout for {rt.worker.name}")
             time.sleep(0.002)
 
-    def _rebalance_to(self, alive: List[str]) -> float:
+    def _rebalance_to(self, alive: List[str],
+                      weights: Optional[np.ndarray] = None) -> float:
         """Incremental rebalance: revoke moved partitions from their live
         owners, quiesce ONLY those workers' in-flight windows, transfer
-        committed offsets, then grant (which fires the §3.2 cache-reset
-        trigger on the new owners). Healthy workers never stop consuming
-        the partitions they keep."""
+        committed offsets, then grant — which fires the §3.2 cache trigger
+        on the new owners, now SURGICAL: survivors retain rows for keys
+        they keep and dump only the gained ranges. ``weights`` (per-
+        partition observed load) makes the sticky LPT assignment balance
+        load, not just partition counts. Healthy workers never stop
+        consuming the partitions they keep."""
         pipe = self.pipe
         old_owner = dict(self.assignment.assignment)
         old_group = {n: rt.worker.group for n, rt in self.runtimes.items()}
-        self.assignment.rebalance(alive)
+        self.assignment.rebalance(alive, weights)
         moved: Dict[str, List[int]] = {}
         grants: Dict[str, List[int]] = {}
         for p, new_w in self.assignment.assignment.items():
@@ -659,8 +688,10 @@ class ConcurrentCluster:
                     q.commit(ng, topic, p, committed - own)
                 q.rewind(og, topic, p)    # abandon the old read-ahead
 
-        # phase 3: grant (cache-reset trigger on changed key sets)
+        # phase 3: grant (surgical cache migration on changed key sets)
+        from repro.core.pipeline import CacheMigrationStats
         redump = 0.0
+        stats = CacheMigrationStats()
         pending = []
         for nw, parts in grants.items():
             msg = _Control("grant", set(parts))
@@ -670,17 +701,22 @@ class ConcurrentCluster:
             if not msg.ack.wait(10.0):
                 raise RuntimeError(f"grant ack timeout for {rt.worker.name}")
             redump += msg.redump_s
+            if msg.stats is not None:
+                stats = stats.merge(msg.stats)
         self.redump_s_total += redump
+        self.last_rebalance_stats = stats
         self._redistribute_buffers()
         return redump
 
     def _redistribute_buffers(self) -> None:
         """Re-home buffered late records to their partitions' CURRENT
-        owners (the paper's replicated buffer store makes them reachable by
-        any worker). Without this, a record buffered by a worker that then
-        loses the record's partition would starve forever: its probes run
-        against a cache that no longer holds the record's business keys."""
-        from repro.core.partitioning import partition_of
+        owners under the CURRENT routing epoch (the paper's replicated
+        buffer store makes them reachable by any worker). Without this, a
+        record buffered by a worker that then loses the record's partition
+        — or whose business key was routed away by an epoch change —
+        would starve forever: its probes run against a cache that no
+        longer holds the record's business keys."""
+        from repro.core.partitioning import isin_sorted
         orphans: List[RecordBatch] = []
         for rt in self.runtimes.values():
             if rt.dead:
@@ -692,16 +728,17 @@ class ConcurrentCluster:
         if not orphans:
             return
         merged = RecordBatch.concat(orphans)
-        parts = partition_of(merged.business_key,
-                             self.pipe.cfg.n_partitions)
+        parts = self.pipe.current_routing().partition_of(
+            merged.business_key).astype(np.int64)
         for name, rt in self.runtimes.items():
             if rt.dead:
                 continue
-            owned = [p for p, w in self.assignment.assignment.items()
-                     if w == name]
-            if not owned:
+            owned = np.asarray(sorted(
+                p for p, w in self.assignment.assignment.items()
+                if w == name), np.int64)
+            if not len(owned):
                 continue
-            mine = merged.filter(np.isin(parts, np.asarray(owned, np.int32)))
+            mine = merged.filter(isin_sorted(owned, parts))
             if len(mine):
                 with rt.commit_lock:
                     rt.worker.buffer.push(mine)
@@ -752,11 +789,9 @@ class ConcurrentCluster:
         for _ in range(n_workers - len(alive)):
             name = f"w{self._next_worker_idx}"
             self._next_worker_idx += 1
-            w = StreamProcessorWorker(
-                name, self.pipe.cfg, self.pipe.queue, self.pipe.warehouse,
-                self.pipe.workers[0].transformer.join_depth
-                if self.pipe.workers else 1,
-                backend=self.pipe.backend)
+            w = self.pipe._new_worker(
+                name, self.pipe.workers[0].transformer.join_depth
+                if self.pipe.workers else 1)
             w.partitions = []
             self.pipe.workers.append(w)
             rt = WorkerRuntime(w, self.pipe, self.cap)
@@ -765,3 +800,118 @@ class ConcurrentCluster:
                 rt.start()
             new_names.append(name)
         return self._rebalance_to(alive + new_names)
+
+    # -------------------------------------------------- adaptive repartition
+    def retire_epochs(self) -> bool:
+        """Retire routing epochs whose records are fully committed; when
+        any retire, re-home buffered lates so none starves at a worker
+        about to release the retired epoch's key ranges."""
+        pipe = self.pipe
+        group_of = {n: rt.worker.group for n, rt in self.runtimes.items()}
+        retired = False
+        for t in pipe.operational_topics:
+            committed = {
+                p: pipe.queue.committed(group_of[owner], t, p)
+                for p, owner in self.assignment.assignment.items()
+                if owner in group_of}
+            retired |= pipe.queue.topics[t].retire_epochs(committed)
+        if retired:
+            self._redistribute_buffers()
+        return retired
+
+    def _initial_cache_rows(self) -> int:
+        """Pre-migration cache rows across live workers — the retention
+        baseline (see ``pipeline.migration_summary``)."""
+        return sum(rt.worker.equipment.n_rows + rt.worker.quality.n_rows
+                   for rt in self.runtimes.values() if not rt.dead)
+
+    def _reroute_all(self, new_table):
+        """Phase 1+2 of an epoch migration: every live worker acks a
+        ``reroute`` control (key filter grown to live∪incoming epochs,
+        caches migrated surgically) BEFORE publishers switch to the new
+        epoch. Returns the merged migration stats."""
+        from repro.core.pipeline import CacheMigrationStats
+        pipe = self.pipe
+        stats = CacheMigrationStats()
+        pending = []
+        for name, rt in self.runtimes.items():
+            if rt.dead:
+                continue
+            msg = _Control("reroute", set(), tables=(new_table,))
+            rt.control.put(msg)
+            pending.append((rt, msg))
+        for rt, msg in pending:
+            if not msg.ack.wait(10.0):
+                raise RuntimeError(
+                    f"reroute ack timeout for {rt.worker.name}")
+            stats = stats.merge(msg.stats)
+        self.redump_s_total += stats.dump_s
+        for t in pipe.operational_topics:
+            pipe.queue.topics[t].set_routing(new_table)
+        return stats
+
+    def _finish_migration(self, cur, stats, initial_rows) -> Dict:
+        from repro.core.pipeline import migration_summary
+        if self.last_rebalance_stats is not None:
+            stats = stats.merge(self.last_rebalance_stats)
+        moved = cur.moved_fraction(
+            self.pipe.current_routing(),
+            np.arange(self.pipe.cfg.n_business_keys))
+        self.last_migration = migration_summary(
+            self.pipe.current_routing().epoch, moved, stats, initial_rows)
+        return self.last_migration
+
+    def repartition(self) -> Dict:
+        """Adaptive skew-aware repartition WITHOUT stopping the stream:
+
+        1. the strategy turns the broker's observed per-partition /
+           per-key publish load into a new routing epoch;
+        2. every live worker gets a ``reroute`` control: its key filter
+           grows to the union of live + incoming epochs and its caches
+           migrate surgically (gained ranges dumped, everything still
+           owned retained) — all BEFORE any record routes under the new
+           epoch;
+        3. publishers switch atomically (per-partition horizons recorded,
+           so the old epoch drains and retires);
+        4. partition ownership rebalances by observed load through the
+           PR-2 machinery (revoke → quiesce-under-commit-lock → offset
+           transfer → surgical grant) and buffers re-home.
+
+        Returns migration stats (also kept as ``last_migration``)."""
+        from repro.core.pipeline import CacheMigrationStats
+        pipe = self.pipe
+        self.retire_epochs()
+        initial_rows = self._initial_cache_rows()
+        part_loads, keys, counts = pipe.observed_loads()
+        cur = pipe.current_routing()
+        new_table = pipe.strategy.rebalanced_table(cur, part_loads,
+                                                   (keys, counts))
+        stats = CacheMigrationStats()
+        if new_table.epoch != cur.epoch:
+            stats = self._reroute_all(new_table)
+        # load-aware ownership rebalance: undrained backlog (old-epoch
+        # placement) + expected future arrivals under the new epoch
+        weights = pipe.backlog_weights()
+        if len(keys):
+            np.add.at(weights,
+                      pipe.current_routing().partition_of(keys), counts)
+        self._rebalance_to(self.alive_workers(), weights)
+        return self._finish_migration(cur, stats, initial_rows)
+
+    def scale_partitions(self, n_partitions: int) -> Dict:
+        """Elastic partition scale event: operational topics grow to
+        ``n_partitions`` empty partitions, the strategy produces the
+        scaled routing table (a consistent-hash ring moves only ~1/n of
+        the key space; the static modulus reshuffles nearly all of it),
+        workers pre-migrate, publishers switch, ownership rebalances."""
+        pipe = self.pipe
+        assert n_partitions >= self.assignment.n_partitions
+        initial_rows = self._initial_cache_rows()
+        cur = pipe.current_routing()
+        new_table = pipe.strategy.scaled_table(cur, n_partitions)
+        for t in pipe.operational_topics:
+            pipe.queue.topics[t].expand(n_partitions)
+        self.assignment.grow(n_partitions)
+        stats = self._reroute_all(new_table)
+        self._rebalance_to(self.alive_workers())
+        return self._finish_migration(cur, stats, initial_rows)

@@ -63,12 +63,20 @@ def serving_clock() -> float:
 
 @dataclasses.dataclass(frozen=True)
 class FactDelta:
-    """One published fact block: the unit of incremental maintenance."""
+    """One published fact block: the unit of incremental maintenance.
+
+    ``routing_epoch`` stamps which key→partition routing epoch the block
+    was processed under — observability only. View *segment* ids derive
+    from fact columns alone (equipment unit, shift, time window), never
+    from partition ids, and the loader's chunk layout uses the stable
+    static hash: both are partition-stable by construction, which is what
+    lets materialized views fold identically across repartitions."""
 
     facts: np.ndarray                        # [n, N_FACT] f32
     event_times: Optional[np.ndarray]        # [n] f64 CDC append stamps
     published_at: float                      # serving_clock at publication
     seq: int                                 # warehouse commit sequence
+    routing_epoch: Optional[int] = None      # routing epoch stamp (or None)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -155,23 +163,28 @@ class MaterializedViewEngine:
             published_at=serving_clock(), watermark_event_time=-np.inf,
             rows_folded=0, deltas_folded=0)
         self._seq = 0
+        self._routing_epoch = 0          # newest routing epoch stamped
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
 
     # -------------------------------------------------------------- write side
     def publish(self, facts: np.ndarray,
-                event_times: Optional[np.ndarray] = None) -> int:
+                event_times: Optional[np.ndarray] = None,
+                routing_epoch: Optional[int] = None) -> int:
         """Enqueue one fact delta (called by the warehouse under its load
         lock, so queue order == commit order). Cheap: a deque append."""
         if not len(facts):
             return self._seq
         with self._q_lock:
             self._seq += 1
+            if routing_epoch is not None:
+                self._routing_epoch = max(self._routing_epoch, routing_epoch)
             self._pending.append(FactDelta(
                 facts=facts,
                 event_times=(np.asarray(event_times, np.float64)
                              if event_times is not None else None),
-                published_at=serving_clock(), seq=self._seq))
+                published_at=serving_clock(), seq=self._seq,
+                routing_epoch=routing_epoch))
             return self._seq
 
     def pending(self) -> int:
@@ -300,6 +313,7 @@ class MaterializedViewEngine:
                "rows_folded": snap.rows_folded,
                "deltas_folded": snap.deltas_folded,
                "pending_deltas": self.pending(),
+               "routing_epoch": self._routing_epoch,
                "data_age_ms": round(snap.staleness_ms(), 3)}
         out.update({f"staleness_{k}": v
                     for k, v in self.staleness().items()})

