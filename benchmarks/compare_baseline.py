@@ -1,0 +1,172 @@
+"""Perf-trend CI gate: diff fresh smoke-mode BENCH_*.json results against
+the checked-in baselines under ``benchmarks/baselines/``.
+
+The tier-1 suite proves the code is *correct*; this gate proves it has
+not gotten *slower*. It compares only the curated headline metrics below
+— paired speedup ratios and boolean contracts — never raw millisecond
+timings, which are meaningless across hosts. Ratios are host-relative
+(both sides of every paired benchmark run on the same machine in the
+same process), so a checked-in ratio from one box is comparable to a
+fresh ratio from another up to scheduler noise; the default noise band
+is 50% (a metric regresses only when it drops below ``baseline / 1.5``).
+Boolean gates (parity, completeness, bitwise equality) have no noise
+band: a flip from true to false always fails.
+
+Usage (CI runs the first form after each smoke benchmark):
+
+    python -m benchmarks.compare_baseline /tmp/BENCH_views_smoke.json
+    python -m benchmarks.compare_baseline --write-baselines FILE [FILE...]
+    python -m benchmarks.compare_baseline --band 1.5 FILE [FILE...]
+
+Exit status is non-zero iff at least one gate regressed; every
+regression is listed on stdout. ``--write-baselines`` copies the given
+fresh results over the checked-in baselines (run locally after an
+intentional perf change, then commit the diff).
+
+New benchmark axes register here by adding (path, kind) rows to GATES —
+unknown files compare nothing and pass with a warning so the gate never
+blocks an unrelated PR.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import shutil
+import sys
+from typing import Dict, List, Sequence, Tuple
+
+BASELINE_DIR = pathlib.Path(__file__).resolve().parent / "baselines"
+
+# Per baseline file: (dotted JSON path, kind). Kinds:
+#   higher — ratio metric, regression iff current < baseline / band
+#   lower  — ratio metric, regression iff current > baseline * band
+#   bool   — contract, regression iff baseline true and current false
+#   exact  — integer contract (dispatch counts), regression iff changed
+GATES: Dict[str, List[Tuple[str, str]]] = {
+    "BENCH_views_smoke.json": [
+        ("query_latency.parity_ok", "bool"),
+        ("query_latency.speedup_at_largest", "higher"),
+        ("staleness_e2e.complete", "bool"),
+        ("batched.parity_ok", "bool"),
+        ("batched.per_batch.1024.epochs_monotonic", "bool"),
+        ("batched.per_batch.1024.speedup_vs_loop", "higher"),
+        ("scan_fold.bitwise_ok", "bool"),
+        ("scan_fold.read_speedup_at_largest", "higher"),
+    ],
+    "BENCH_dispatch_smoke.json": [
+        ("round_trips.round_trips_per_worker_step.pre", "exact"),
+        ("round_trips.round_trips_per_worker_step.post", "exact"),
+        ("sustained.paired_median_device_plane_vs_pre_pr", "higher"),
+        ("sustained.paired_median_concurrent_serving_vs_pre_pr", "higher"),
+    ],
+    "BENCH_sustained_smoke.json": [
+        ("dodetl.2.complete", "bool"),
+        ("speedup_vs_baseline.2", "higher"),
+    ],
+    "BENCH_skew_smoke.json": [
+        ("gates.complete", "bool"),
+        ("gates.warehouse_byte_identical", "bool"),
+        ("gates.cache_retention", "higher"),
+        ("gates.imbalance_post", "lower"),
+    ],
+}
+
+
+def _lookup(doc: dict, path: str):
+    node = doc
+    for part in path.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def _baseline_name(current: pathlib.Path) -> str:
+    # /tmp/BENCH_views_smoke.json -> BENCH_views_smoke.json
+    return current.name
+
+
+def compare(current_path: pathlib.Path, band: float) -> List[str]:
+    """Return the list of regression messages (empty = pass)."""
+    name = _baseline_name(current_path)
+    gates = GATES.get(name)
+    if gates is None:
+        print(f"[compare_baseline] no gates registered for {name}; "
+              f"nothing to compare")
+        return []
+    baseline_path = BASELINE_DIR / name
+    if not baseline_path.exists():
+        print(f"[compare_baseline] no checked-in baseline {baseline_path}; "
+              f"run --write-baselines to create one")
+        return []
+    base = json.loads(baseline_path.read_text())
+    cur = json.loads(current_path.read_text())
+    regressions: List[str] = []
+    for path, kind in gates:
+        b, c = _lookup(base, path), _lookup(cur, path)
+        if b is None:
+            # baseline predates this metric: not a regression, just note it
+            print(f"  {name}:{path} absent from baseline (new metric, "
+                  f"current={c}) — refresh with --write-baselines")
+            continue
+        if c is None:
+            regressions.append(f"{name}:{path} missing from current "
+                               f"results (baseline={b})")
+            continue
+        if kind == "bool":
+            ok = (not b) or bool(c)
+        elif kind == "exact":
+            ok = c == b
+        elif kind == "higher":
+            ok = float(c) >= float(b) / band
+        else:  # lower
+            ok = float(c) <= float(b) * band
+        marker = "ok " if ok else "REG"
+        print(f"  [{marker}] {name}:{path}  baseline={b}  current={c}  "
+              f"({kind}, band={band})")
+        if not ok:
+            regressions.append(
+                f"{name}:{path} regressed ({kind}): baseline={b}, "
+                f"current={c}, band={band}")
+    return regressions
+
+
+def write_baselines(paths: Sequence[pathlib.Path]) -> None:
+    BASELINE_DIR.mkdir(parents=True, exist_ok=True)
+    for p in paths:
+        json.loads(p.read_text())       # refuse to check in malformed JSON
+        dst = BASELINE_DIR / _baseline_name(p)
+        shutil.copyfile(p, dst)
+        print(f"wrote {dst}")
+
+
+def main(argv: Sequence[str] | None = None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("results", nargs="+", type=pathlib.Path,
+                    help="fresh smoke-mode BENCH_*.json file(s)")
+    ap.add_argument("--band", type=float, default=1.5,
+                    help="noise band for ratio metrics (default 1.5 = "
+                         "fail when >50%% worse than baseline)")
+    ap.add_argument("--write-baselines", action="store_true",
+                    help="overwrite checked-in baselines with the given "
+                         "results instead of comparing")
+    args = ap.parse_args(argv)
+    if args.write_baselines:
+        write_baselines(args.results)
+        return 0
+    regressions: List[str] = []
+    for p in args.results:
+        regressions += compare(p, args.band)
+    if regressions:
+        print(f"\n{len(regressions)} perf regression(s) vs "
+              f"benchmarks/baselines/:")
+        for r in regressions:
+            print(f"  - {r}")
+        return 1
+    print("\nperf-trend gate: all metrics within band of baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,6 @@
 """Report-serving benchmark: the read-side claim suite.
 
-Three measurements, written to ``BENCH_views.json``:
+Five measurements, written to ``BENCH_views.json``:
 
 * ``query_latency`` — incremental-view report queries
   (``ReportServer.kpi_rollup``, O(n_units) reads of folded state) vs the
@@ -21,6 +21,24 @@ Three measurements, written to ``BENCH_views.json``:
   with the serving stage attached, next to the pipeline's load-freshness
   percentiles. The headline is ``staleness_p95 / freshness_p95`` — how
   much the serving hop adds on top of the write path (acceptance: <= 2x).
+
+* ``batched`` — the batched query plane vs the per-query dispatch loop:
+  one compiled ``QueryPlan`` of B heterogeneous queries (per-unit OEE
+  point queries + view reads + top-k + windowed rates + shift/rollup)
+  executed in one vectorized dispatch per view, against B sequential
+  ``ReportSnapshot`` calls. Paired per repeat with a FRESH epoch before
+  each side so neither inherits the other's per-epoch memos; parity is
+  byte-asserted on a shared epoch each repeat. Headlines: columnar
+  effective qps and the median paired speedup at each batch size
+  (acceptance: >= 5x at B >= 1024).
+
+* ``scan_fold`` — the associative-scan windowed fold: read side, ONE
+  ``prefix_fold`` scan answering all S cumulative-window prefixes vs the
+  bitwise-identical per-window tree recompute (``prefix_fold_reference``)
+  — the S >= 128 win; write side, ``fold_segments_scan`` vs the unrolled
+  halving tree on one delta — measured honestly (the scan LOSES on CPU
+  hosts; documented, tree stays the default). Bitwise equality asserted
+  on both sides every repeat.
 
     PYTHONPATH=src python -m benchmarks.report_serving [--smoke]
 """
@@ -43,9 +61,10 @@ from repro.core.cdc import SourceDatabase
 from repro.data.sampler import (SamplerConfig, SteelworksSampler,
                                 synthetic_facts)
 from repro.core import DODETLPipeline, StarSchemaWarehouse, percentiles_ms
-from repro.core.backend import get_backend
+from repro.core.backend import get_backend, prefix_fold_reference
 from repro.runtime.cluster import ConcurrentCluster
-from repro.serving import (MaterializedViewEngine, ReportServer,
+from repro.serving import (MaterializedViewEngine, ReportQuery, ReportServer,
+                           compile_queries, production_rate_windows,
                            steelworks_views)
 
 N_UNITS = 20
@@ -223,6 +242,211 @@ def bench_staleness(wl: Workload, n_workers: int = 2) -> Dict:
             "rows_folded": engine.snapshot().rows_folded}
 
 
+# ------------------------------------------------------------ batched plane
+def _batch_mix(batch: int) -> List[ReportQuery]:
+    """Deterministic heterogeneous mix: 75% per-unit OEE point queries
+    (the dashboard fan-out shape), the rest spread over view reads,
+    top-k downtime, windowed rates, shift reports and cumulative curves."""
+    qs: List[ReportQuery] = []
+    for i in range(batch):
+        j = i % 16
+        if j < 12:
+            qs.append(ReportQuery("oee", unit=i % N_UNITS))
+        elif j == 12:
+            qs.append(ReportQuery(
+                "view", view=("oee_by_equipment" if i % 32 < 16
+                              else "production_rate_windows")))
+        elif j == 13:
+            qs.append(ReportQuery("top_downtime", k=5))
+        elif j == 14:
+            qs.append(ReportQuery("production_rate"))
+        elif i % 32 < 16:
+            qs.append(ReportQuery("shift_report"))
+        else:
+            qs.append(ReportQuery("production_curve"))
+    return qs
+
+
+def _run_loop(rs, queries: Sequence[ReportQuery]) -> list:
+    """The status-quo path: one Python-dispatched snapshot read per query."""
+    out = []
+    for q in queries:
+        k = q.kind
+        if k == "oee":
+            out.append(rs.oee(q.unit))
+        elif k == "view":
+            out.append(rs.query(q.view))
+        elif k == "top_downtime":
+            out.append(rs.top_downtime(q.k))
+        elif k == "production_rate":
+            out.append(rs.production_rate())
+        elif k == "shift_report":
+            out.append(rs.shift_report())
+        elif k == "production_curve":
+            out.append(rs.production_curve())
+        else:
+            out.append(rs.kpi_rollup())
+    return out
+
+
+def _answers_equal(batched, loop_answer) -> bool:
+    if isinstance(loop_answer, np.ndarray):          # kpi_rollup payload
+        return batched.data["kpi_rollup"].tobytes() == loop_answer.tobytes()
+    for key, want in loop_answer.data.items():
+        got = batched.data[key]
+        if isinstance(want, np.ndarray):
+            if np.asarray(got).tobytes() != want.tobytes():
+                return False
+        elif isinstance(want, float):
+            if got != want and not (np.isnan(got) and np.isnan(want)):
+                return False
+        elif got != want:
+            return False
+    return True
+
+
+def bench_batched(n_rows: int, batch_sizes: Sequence[int], reps: int,
+                  backend: str = "jax") -> Dict:
+    """Compiled-plan batch execution vs the per-query loop. Each repeat
+    folds a fresh epoch before EACH side, so both run with cold per-epoch
+    memos (neither inherits the other's shared derivations); the headline
+    is the median of per-repeat paired ratios. Byte parity between both
+    paths is asserted on a shared epoch once per batch size."""
+    wh, engine, server = _loaded_server(n_rows, backend)
+    engine.prewarm_read()
+    rng = np.random.default_rng(99)
+
+    def advance_epoch():
+        wh.load_partitioned(synthetic_facts(rng, 256, N_UNITS), N_UNITS)
+        engine.fold_pending()
+
+    out: Dict[str, object] = {"rows_preloaded": n_rows, "backend": backend,
+                              "mix": "75% point OEE + shared reports",
+                              "per_batch": {}}
+    for batch in batch_sizes:
+        queries = _batch_mix(batch)
+        t0 = time.perf_counter()
+        plan = compile_queries(queries)
+        compile_ms = (time.perf_counter() - t0) * 1e3
+        # parity on ONE shared epoch (untimed), then warm both paths
+        advance_epoch()
+        rs = server.snapshot()
+        parity_ok = all(_answers_equal(a, b) for a, b in
+                        zip(plan.execute(rs).reports(),
+                            _run_loop(rs, queries)))
+        exec_ms, rep_ms, loop_ms, ratios = [], [], [], []
+        epochs: List[int] = []
+        for _ in range(reps):
+            advance_epoch()
+            rs_b = server.snapshot()
+            t0 = time.perf_counter()
+            res = plan.execute(rs_b)             # columnar answer
+            t1 = time.perf_counter()
+            res.reports()                        # per-query materialization
+            t2 = time.perf_counter()
+            advance_epoch()
+            rs_l = server.snapshot()
+            t3 = time.perf_counter()
+            _run_loop(rs_l, queries)
+            t4 = time.perf_counter()
+            e, r, l = [(b - a) * 1e3 for a, b in
+                       ((t0, t1), (t1, t2), (t3, t4))]
+            exec_ms.append(round(e, 4))
+            rep_ms.append(round(r, 4))
+            loop_ms.append(round(l, 4))
+            ratios.append(l / max(e, 1e-9))
+            epochs.append(res.epoch)
+        e_med, r_med, l_med = (_median(exec_ms), _median(rep_ms),
+                               _median(loop_ms))
+        out["per_batch"][str(batch)] = {
+            "batch": batch,
+            "plan_compile_ms": round(compile_ms, 4),
+            "exec_ms_runs": exec_ms, "loop_ms_runs": loop_ms,
+            "exec_ms": e_med, "reports_ms": r_med, "loop_ms": l_med,
+            "qps_columnar": round(batch / (e_med * 1e-3)),
+            "qps_materialized": round(batch / ((e_med + r_med) * 1e-3)),
+            "qps_loop": round(batch / (l_med * 1e-3)),
+            "paired_speedups": [round(x, 2) for x in ratios],
+            "speedup_vs_loop": round(_median(ratios), 2),
+            "parity_ok": bool(parity_ok),
+            "epochs_monotonic": epochs == sorted(epochs)
+            and len(set(epochs)) == len(epochs),
+        }
+    largest = out["per_batch"][str(max(batch_sizes))]
+    out["speedup_at_largest"] = largest["speedup_vs_loop"]
+    out["qps_at_largest"] = largest["qps_columnar"]
+    out["parity_ok"] = all(v["parity_ok"]
+                           for v in out["per_batch"].values())
+    return out
+
+
+# ---------------------------------------------------------------- scan folds
+def bench_scan_fold(window_sizes: Sequence[int], reps: int,
+                    backend: str = "jax", delta_rows: int = 4096) -> Dict:
+    """Associative-scan windowed folds, both sides of the story.
+
+    READ side (the win): ONE ``prefix_fold`` scan answers all S
+    cumulative-window prefixes vs recomputing each window's prefix with
+    the bitwise-identical tree chaining (``prefix_fold_reference``) — the
+    O(S log S) vs O(S^2) gap that opens decisively by S >= 128.
+
+    WRITE side (the honest negative): ``fold_segments_scan`` vs the
+    unrolled halving tree on the same delta — bitwise-identical results,
+    but the scan computes S-1 prefixes it throws away and XLA does not
+    dead-code them, so the tree stays the engine default on CPU hosts."""
+    b = get_backend(backend)
+    rng = np.random.default_rng(5)
+    out: Dict[str, object] = {"backend": backend,
+                              "delta_rows": delta_rows, "per_windows": {}}
+    for S in window_sizes:
+        spec = production_rate_windows(n_windows=S)
+        facts = synthetic_facts(rng, delta_rows, N_UNITS)
+        seg, vals = spec.segments(facts), spec.values(facts)
+        table = b.fold_segments(seg, vals, S)
+        b.prefix_fold(table)                         # jit warm-up
+        b.fold_segments_scan(seg, vals, S)
+        read_scan, read_tree, rratios = [], [], []
+        write_tree, write_scan, wratios = [], [], []
+        bitwise = True
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            cum = b.prefix_fold(table)
+            t1 = time.perf_counter()
+            ref = prefix_fold_reference(table)
+            t2 = time.perf_counter()
+            tree = b.fold_segments(seg, vals, S)
+            t3 = time.perf_counter()
+            scan = b.fold_segments_scan(seg, vals, S)
+            t4 = time.perf_counter()
+            bitwise &= (cum.tobytes() == ref.tobytes()
+                        and tree.tobytes() == scan.tobytes())
+            rs_ms, rt_ms = (t1 - t0) * 1e3, (t2 - t1) * 1e3
+            wt_ms, ws_ms = (t3 - t2) * 1e3, (t4 - t3) * 1e3
+            read_scan.append(round(rs_ms, 4))
+            read_tree.append(round(rt_ms, 4))
+            rratios.append(rt_ms / max(rs_ms, 1e-9))
+            write_tree.append(round(wt_ms, 4))
+            write_scan.append(round(ws_ms, 4))
+            wratios.append(wt_ms / max(ws_ms, 1e-9))
+        out["per_windows"][str(S)] = {
+            "windows": S,
+            "read_scan_ms": _median(read_scan),
+            "read_per_window_tree_ms": _median(read_tree),
+            "read_speedup_scan_vs_per_window_tree":
+                round(_median(rratios), 2),
+            "write_tree_ms": _median(write_tree),
+            "write_scan_ms": _median(write_scan),
+            "write_tree_over_scan": round(_median(wratios), 3),
+            "bitwise_ok": bitwise,
+        }
+    largest = out["per_windows"][str(max(window_sizes))]
+    out["read_speedup_at_largest"] = \
+        largest["read_speedup_scan_vs_per_window_tree"]
+    out["bitwise_ok"] = all(v["bitwise_ok"]
+                            for v in out["per_windows"].values())
+    return out
+
+
 def summary(quick: bool = False) -> Dict[str, float]:
     """Headline numbers for benchmarks/run.py's CSV report."""
     sizes = (4_000, 16_000) if quick else (10_000, 40_000)
@@ -230,6 +454,8 @@ def summary(quick: bool = False) -> Dict[str, float]:
     wl = Workload(n_base=800, waves=2, chunk=800, n_partitions=8,
                   join_depth=2)
     s = bench_staleness(wl)
+    bt = bench_batched(8_000 if quick else 40_000, (1024,), reps=3)
+    sf = bench_scan_fold((128,), reps=2)
     return {
         "speedup_view_vs_rescan_at_largest": q["speedup_at_largest"],
         "parity_ok": q["parity_ok"],
@@ -238,6 +464,11 @@ def summary(quick: bool = False) -> Dict[str, float]:
         "staleness_over_freshness_p95":
             s["staleness_p95_over_freshness_p95"],
         "complete": s["complete"],
+        "batched_speedup_at_1024": bt["speedup_at_largest"],
+        "batched_qps_at_1024": bt["qps_at_largest"],
+        "batched_parity_ok": bt["parity_ok"],
+        "scan_read_speedup_at_128": sf["read_speedup_at_largest"],
+        "scan_bitwise_ok": sf["bitwise_ok"],
     }
 
 
@@ -259,6 +490,8 @@ def main() -> None:
         threads = (1, 4)
         queries = 200
         conc_rows = 20_000
+        batch_sizes = (256, 1024)       # gate needs >= 1024
+        scan_windows = (32, 128)        # gate needs >= 128
         wl = Workload(n_base=800, waves=2, chunk=800, n_partitions=8,
                       join_depth=2, backend=args.backend)
     else:
@@ -267,6 +500,8 @@ def main() -> None:
         threads = (1, 4, 16)
         queries = 500
         conc_rows = 200_000
+        batch_sizes = (64, 256, 1024, 4096)
+        scan_windows = (128, 256, 512)
         # staleness is a STEADY-STATE metric: pace arrival below the
         # host's saturation capacity (firehose arrival measures backlog
         # drain, where the fold stage is starved along with everything
@@ -288,6 +523,13 @@ def main() -> None:
     print("concurrency:", json.dumps(results["concurrency"], indent=2))
     results["staleness_e2e"] = bench_staleness(wl)
     print("staleness_e2e:", json.dumps(results["staleness_e2e"], indent=2))
+    results["batched"] = bench_batched(conc_rows, batch_sizes, reps,
+                                       args.backend)
+    print("batched:", json.dumps(results["batched"]["per_batch"], indent=2))
+    results["scan_fold"] = bench_scan_fold(scan_windows, max(reps - 2, 2),
+                                           args.backend)
+    print("scan_fold:", json.dumps(results["scan_fold"]["per_windows"],
+                                   indent=2))
 
     with open(args.out, "w") as f:
         json.dump(results, f, indent=2)

@@ -46,8 +46,9 @@ def main() -> None:
     emit("kernel.hash_join", K.bench_hash_join())
     emit("kernel.transform", K.bench_transform())
 
-    # read-side serving layer: incremental-view query speedup + staleness
-    # (full sweep: python -m benchmarks.report_serving -> BENCH_views.json)
+    # read-side serving layer: incremental-view query speedup, staleness,
+    # batched query-plane qps and associative-scan fold speedups (full
+    # sweep: python -m benchmarks.report_serving -> BENCH_views.json)
     from benchmarks import report_serving as RS
     emit("serving", RS.summary(quick=args.quick))
 

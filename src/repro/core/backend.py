@@ -24,7 +24,26 @@ against the ``ComputeBackend`` protocol:
                          block, segment-COMPACTED: the tree folds only the
                          delta's live segments and scatters into the
                          packed table (``repro.serving.engine`` folds
-                         these into materialized report views).
+                         these into materialized report views),
+  * ``fold_segments_scan`` — the same delta fold expressed as a
+                         ``jax.lax.associative_scan`` over bit-reversed
+                         rows: BITWISE-identical to the halving tree (the
+                         bit-reversal permutation makes the scan's
+                         adjacent-pair combine order equal the tree's
+                         stride-halving order), kept as a parity-proven
+                         alternative (measured slower than the unrolled
+                         tree on CPU hosts — see docs/BENCHMARKS.md),
+  * ``batch_gather_stats`` — the batched read path's point-query op: ONE
+                         gather dispatch answers a whole batch of
+                         per-segment stat lookups (count/sum/min/max +
+                         means) against a packed view table,
+  * ``prefix_fold``    — the windowed read path's cumulative fold: all S
+                         window prefixes of a packed view table combined
+                         in one O(log S)-depth associative scan
+                         (bitwise-equal to halving-tree-folded pow2
+                         blocks chained in block order — the same
+                         association ``_fold_blocks`` uses; oracle:
+                         ``prefix_fold_reference``).
 
 Three registered implementations:
 
@@ -184,6 +203,156 @@ def _fold_blocks(seg: np.ndarray, vals: np.ndarray, n_segments: int,
         acc = combine_fold(acc, tree(s, v, n_fold))
     out[live] = acc[:n_active]           # scatter into the packed table
     return out
+
+
+_BITREV_CACHE: Dict[int, np.ndarray] = {}
+
+
+def bitrev_permutation(n: int) -> np.ndarray:
+    """Bit-reversal permutation of [0, n) for power-of-two ``n``.
+
+    The load-bearing identity of the scan fold: the halving tree
+    (``x[:h] ⊕ x[h:]`` repeated) applied to ``x`` combines exactly the
+    same operand pairs, at the same tree levels, as the adjacent-pair
+    tree (``x[0::2] ⊕ x[1::2]`` repeated) applied to ``x[bitrev]`` — and
+    the adjacent-pair tree is precisely the reduction
+    ``jax.lax.associative_scan`` computes for its last output element.
+    Permuting rows first therefore makes the scan's reduction BITWISE
+    equal to ``_fold_tree_np``'s halving tree."""
+    if n & (n - 1):
+        raise ValueError(f"bitrev needs a power of two, got {n}")
+    cached = _BITREV_CACHE.get(n)
+    if cached is None:
+        bits = (n - 1).bit_length()
+        idx = np.arange(n, dtype=np.int64)
+        rev = np.zeros(n, np.int64)
+        for b in range(bits):
+            rev |= ((idx >> b) & 1) << (bits - 1 - b)
+        rev.flags.writeable = False
+        _BITREV_CACHE[n] = cached = rev
+    return cached
+
+
+def _fold_tree_scan_np(seg: np.ndarray, vals: np.ndarray,
+                       n_segments: int) -> np.ndarray:
+    """Scan-order twin of ``_fold_tree_np``: bit-reverse the (padded,
+    power-of-two) rows, then reduce ADJACENT pairs — the combine order of
+    ``jax.lax.associative_scan``'s final element. Bitwise-identical to the
+    halving tree (see ``bitrev_permutation``), so it plugs into
+    ``_fold_blocks`` under the same determinism contract."""
+    rev = bitrev_permutation(len(seg))
+    seg = seg[rev]
+    vals = vals[rev]
+    onehot = seg[:, None] == np.arange(n_segments, dtype=seg.dtype)[None, :]
+    oh = onehot.astype(np.float32)
+    cnt = oh
+    sums = oh[:, :, None] * vals[:, None, :]
+    mins = np.where(onehot[:, :, None], vals[:, None, :], np.float32(np.inf))
+    maxs = np.where(onehot[:, :, None], vals[:, None, :], np.float32(-np.inf))
+    while cnt.shape[0] > 1:
+        cnt = cnt[0::2] + cnt[1::2]
+        sums = sums[0::2] + sums[1::2]
+        mins = np.minimum(mins[0::2], mins[1::2])
+        maxs = np.maximum(maxs[0::2], maxs[1::2])
+    return np.concatenate([cnt[0][:, None], sums[0], mins[0], maxs[0]],
+                          axis=1)
+
+
+# ------------------------------------------------- batched read-path helpers
+def gather_width(n_lanes: int) -> int:
+    """Row width of ``batch_gather_stats`` output:
+    [count | sums(L) | mins(L) | maxs(L) | means(L)]."""
+    return 1 + 4 * n_lanes
+
+
+def _gather_stats_np(table: np.ndarray, idx: np.ndarray) -> np.ndarray:
+    table = np.asarray(table, np.float32)
+    idx = np.asarray(idx, np.int64)
+    L = (table.shape[1] - 1) // 3
+    t = table[idx]                                   # [B, 1 + 3L]
+    cnt = t[:, :1]
+    with np.errstate(invalid="ignore", divide="ignore"):
+        means = np.where(cnt > 0, t[:, 1:1 + L] / cnt,
+                         np.float32(np.nan))
+    return np.concatenate([t, means], axis=1)        # [B, 1 + 4L]
+
+
+def _combine_packed_np(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Vectorized ``combine_fold`` over leading axes (rows are packed
+    [1 + 3L] fold vectors; the lane split is the last axis)."""
+    L = (a.shape[-1] - 1) // 3
+    return np.concatenate([
+        a[..., :1 + L] + b[..., :1 + L],
+        np.minimum(a[..., 1 + L:1 + 2 * L], b[..., 1 + L:1 + 2 * L]),
+        np.maximum(a[..., 1 + 2 * L:], b[..., 1 + 2 * L:])], axis=-1)
+
+
+def _assoc_scan_np(x: np.ndarray) -> np.ndarray:
+    """Host twin of ``jax.lax.associative_scan`` (inclusive, axis 0) over
+    packed fold rows — the SAME odd/even recursion, so results are bitwise
+    identical to the jitted scan. Callers pad to a power of two first
+    (every recursion level then stays even)."""
+    n = x.shape[0]
+    if n < 2:
+        return x.copy()
+    reduced = _combine_packed_np(x[0::2], x[1::2])
+    odd = _assoc_scan_np(reduced)
+    if n % 2 == 0:
+        even = _combine_packed_np(odd[:-1], x[2::2])
+    else:
+        even = _combine_packed_np(odd, x[2::2])
+    out = np.empty_like(x)
+    out[0] = x[0]
+    out[1::2] = odd
+    out[2::2] = even
+    return out
+
+
+def prefix_fold_reference(table: np.ndarray) -> np.ndarray:
+    """Recompute-from-scratch oracle for ``prefix_fold``: window ``w``'s
+    cumulative aggregate built the way ``_fold_blocks`` chains blocks —
+    split rows [0, w] into the power-of-two blocks of the binary
+    decomposition of w+1 (largest first), reduce each block with the
+    balanced adjacent-pair tree, and left-chain the block partials with
+    the associative combine. ``jax.lax.associative_scan``'s inclusive
+    prefixes use exactly this association, so ``prefix_fold`` must match
+    BITWISE (asserted in tests and the scan-fold benchmark). O(S²) — an
+    oracle, not a serving path."""
+    table = np.asarray(table, np.float32)
+    S = len(table)
+    out = np.empty_like(table)
+    for w in range(S):
+        n = w + 1
+        acc = None
+        lo = 0
+        for b in reversed(range(n.bit_length())):
+            if (n >> b) & 1:
+                blk = table[lo:lo + (1 << b)]
+                while len(blk) > 1:          # balanced adjacent-pair tree
+                    blk = _combine_packed_np(blk[0::2], blk[1::2])
+                acc = blk[0] if acc is None \
+                    else _combine_packed_np(acc, blk[0])
+                lo += 1 << b
+        out[w] = acc
+    return out
+
+
+def _prefix_fold_np(table: np.ndarray) -> np.ndarray:
+    """Numpy ``prefix_fold``: pad the window axis to a power of two with
+    fold-identity rows (an inclusive scan's prefix [w] never reads rows
+    past w, so padding is invisible), run the associative-scan twin,
+    slice. One pass, O(S log S) combines — vs O(S²) for S independent
+    per-window refolds."""
+    table = np.asarray(table, np.float32)
+    S, W = table.shape
+    if S == 0:
+        return table.copy()
+    L = (W - 1) // 3
+    m = 1 << (S - 1).bit_length()
+    if m != S:
+        pad = np.broadcast_to(empty_fold_state(1, L), (m - S, W))
+        table = np.concatenate([table, pad])
+    return _assoc_scan_np(table)[:S]
 
 
 class FactBlock:
@@ -346,6 +515,43 @@ class ComputeBackend:
         [n_segments, 1 + 3L] (see ``fold_width``)."""
         raise NotImplementedError
 
+    def fold_segments_scan(self, seg_ids: np.ndarray, values: np.ndarray,
+                           n_segments: int) -> np.ndarray:
+        """``fold_segments`` with the per-block reduction expressed as an
+        associative scan over bit-reversed rows instead of the unrolled
+        halving tree (O(log n) combine depth either way; the scan form is
+        the one scan-capable hardware pipelines). BITWISE-identical output
+        to ``fold_segments`` — the bit-reversal permutation aligns the
+        scan's adjacent-pair combine order with the tree's stride-halving
+        order (see ``bitrev_permutation``). Measured slower than the
+        unrolled tree on CPU hosts (XLA does not dead-code the scan's
+        unused prefixes), so the tree stays the default write-side fold;
+        this op is the parity-proven alternative and the form the
+        windowed read path's ``prefix_fold`` shares its association
+        with."""
+        raise NotImplementedError
+
+    def batch_gather_stats(self, table: np.ndarray,
+                           seg_ids: np.ndarray) -> np.ndarray:
+        """Batched point-query op of the read path: gather ``B`` segment
+        rows from a packed ``[S, 1 + 3L]`` fold table and derive lane
+        means, in ONE dispatch. ``seg_ids`` [B] int in [0, S). Returns
+        host ``[B, 1 + 4L]`` f32: [count | sums | mins | maxs | means],
+        means NaN where count == 0 (see ``gather_width``). Bitwise
+        deterministic: the mean is the same single correctly-rounded f32
+        divide the per-query path performs."""
+        raise NotImplementedError
+
+    def prefix_fold(self, table: np.ndarray) -> np.ndarray:
+        """Cumulative windowed fold of the read path: inclusive running
+        combine of a packed ``[S, 1 + 3L]`` view table along the window
+        axis — row ``w`` of the result aggregates windows [0, w]. ONE
+        O(log S)-depth associative scan answers every window prefix at
+        once, replacing S independent per-window refolds (the S ≳ 128
+        win). Bitwise-deterministic across numpy/jax and equal to
+        ``prefix_fold_reference``. Returns host ``[S, 1 + 3L]`` f32."""
+        raise NotImplementedError
+
     # -------------------------------------------------------------- helpers
     @staticmethod
     def _pad_bucket(prod: np.ndarray, floor: int = 1,
@@ -492,6 +698,26 @@ class NumpyBackend(ComputeBackend):
             return _fold_tree_np(s, v, ns)
         return _fold_blocks(seg_ids, values, n_segments, tree)
 
+    def fold_segments_scan(self, seg_ids, values, n_segments):
+        def tree(s, v, ns):
+            self.op_dispatches += 1
+            return _fold_tree_scan_np(s, v, ns)
+        return _fold_blocks(seg_ids, values, n_segments, tree)
+
+    def batch_gather_stats(self, table, seg_ids):
+        idx = np.asarray(seg_ids, np.int64)
+        if not len(idx):
+            L = (np.asarray(table).shape[1] - 1) // 3
+            return np.zeros((0, gather_width(L)), np.float32)
+        self.op_dispatches += 1
+        return _gather_stats_np(table, idx)
+
+    def prefix_fold(self, table):
+        if not len(table):
+            return np.asarray(table, np.float32).copy()
+        self.op_dispatches += 1
+        return _prefix_fold_np(table)
+
 
 def _kpi_facts_np(prod, eq_rows, q_rows, found) -> np.ndarray:
     """Host twin of ``transformer.transform_kernel``'s KPI math (same op
@@ -591,6 +817,54 @@ class JaxBackend(ComputeBackend):
                                              jnp.asarray(v), ns))
         return _fold_blocks(seg_ids, values, n_segments, tree)
 
+    def fold_segments_scan(self, seg_ids, values, n_segments):
+        # same compacted block driver; the per-block reduction is ONE
+        # jax.lax.associative_scan over bit-reversed rows — bitwise equal
+        # to the halving tree (see bitrev_permutation)
+        def tree(s, v, ns):
+            import jax.numpy as jnp
+            self.op_dispatches += 1
+            self.host_syncs += 1
+            rev = bitrev_permutation(len(s))
+            return np.asarray(_fold_tree_scan_jnp(
+                jnp.asarray(s, jnp.int32), jnp.asarray(v),
+                jnp.asarray(rev, jnp.int32), ns))
+        return _fold_blocks(seg_ids, values, n_segments, tree)
+
+    def batch_gather_stats(self, table, seg_ids):
+        import jax.numpy as jnp
+        idx = np.asarray(seg_ids, np.int64)
+        n = len(idx)
+        if not n:
+            L = (np.asarray(table).shape[1] - 1) // 3
+            return np.zeros((0, gather_width(L)), np.float32)
+        # pow2 bucket so jit compiles once per batch-size bucket; pad ids
+        # point at row 0 and the pad rows are sliced off after the sync
+        bucket = max(8, 1 << (n - 1).bit_length())
+        if bucket != n:
+            idx = np.concatenate([idx, np.zeros(bucket - n, np.int64)])
+        self.op_dispatches += 1
+        self.host_syncs += 1
+        out = np.asarray(_gather_stats_jnp(
+            jnp.asarray(np.asarray(table, np.float32)),
+            jnp.asarray(idx, jnp.int32)))
+        return out[:n]
+
+    def prefix_fold(self, table):
+        import jax.numpy as jnp
+        table = np.asarray(table, np.float32)
+        S, W = table.shape
+        if S == 0:
+            return table.copy()
+        L = (W - 1) // 3
+        m = 1 << (S - 1).bit_length()
+        if m != S:           # identity pad: inclusive prefixes never read it
+            table = np.concatenate(
+                [table, np.broadcast_to(empty_fold_state(1, L), (m - S, W))])
+        self.op_dispatches += 1
+        self.host_syncs += 1
+        return np.asarray(_prefix_fold_jnp(jnp.asarray(table)))[:S]
+
 
 _ROLLUP_JIT = None
 
@@ -653,6 +927,99 @@ def _fold_tree_jnp(seg, vals, n_segments: int):
 
         _FOLD_JIT = fold
     return _FOLD_JIT(seg, vals, n_segments)
+
+
+_SCAN_FOLD_JIT = None
+
+
+def _fold_tree_scan_jnp(seg, vals, rev, n_segments: int):
+    """Scan-form twin of ``_fold_tree_jnp``: one-hot the bit-reversed
+    rows, then take the LAST element of an inclusive
+    ``jax.lax.associative_scan`` — the scan's reduction combines adjacent
+    pairs level by level, which on bit-reversed input is operand-for-
+    operand the halving tree, so output is bitwise identical."""
+    global _SCAN_FOLD_JIT
+    if _SCAN_FOLD_JIT is None:
+        import functools
+
+        import jax
+        import jax.numpy as jnp
+
+        @functools.partial(jax.jit, static_argnames=("n_segments",))
+        def fold(seg, vals, rev, n_segments):
+            seg = seg[rev]
+            vals = vals[rev]
+            onehot = seg[:, None] == jnp.arange(n_segments, dtype=seg.dtype)
+            oh = onehot.astype(jnp.float32)
+            sums = oh[:, :, None] * vals[:, None, :]
+            mins = jnp.where(onehot[:, :, None], vals[:, None, :], jnp.inf)
+            maxs = jnp.where(onehot[:, :, None], vals[:, None, :], -jnp.inf)
+
+            def comb(a, b):
+                return (a[0] + b[0], a[1] + b[1],
+                        jnp.minimum(a[2], b[2]), jnp.maximum(a[3], b[3]))
+
+            c, s, mn, mx = jax.lax.associative_scan(
+                comb, (oh, sums, mins, maxs), axis=0)
+            return jnp.concatenate(
+                [c[-1][:, None], s[-1], mn[-1], mx[-1]], axis=1)
+
+        _SCAN_FOLD_JIT = fold
+    return _SCAN_FOLD_JIT(seg, vals, rev, n_segments)
+
+
+_GATHER_JIT = None
+
+
+def _gather_stats_jnp(table, idx):
+    """Jitted batched gather + means: the mean lane is the same single
+    correctly-rounded f32 divide the per-query path performs, so results
+    are bitwise equal to ``_gather_stats_np`` (NaN for empty segments)."""
+    global _GATHER_JIT
+    if _GATHER_JIT is None:
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def gather(table, idx):
+            L = (table.shape[1] - 1) // 3
+            t = table[idx]                           # [B, 1 + 3L]
+            cnt = t[:, :1]
+            means = jnp.where(cnt > 0, t[:, 1:1 + L] / cnt, jnp.nan)
+            return jnp.concatenate([t, means], axis=1)
+
+        _GATHER_JIT = gather
+    return _GATHER_JIT(table, idx)
+
+
+_PREFIX_JIT = None
+
+
+def _prefix_fold_jnp(table):
+    """Jitted inclusive associative scan over packed fold rows (window
+    axis). Same odd/even recursion as ``_assoc_scan_np`` — bitwise equal
+    to the numpy backend and to ``prefix_fold_reference``."""
+    global _PREFIX_JIT
+    if _PREFIX_JIT is None:
+        import jax
+        import jax.numpy as jnp
+
+        @jax.jit
+        def pf(table):
+            L = (table.shape[1] - 1) // 3
+
+            def comb(a, b):
+                return jnp.concatenate([
+                    a[..., :1 + L] + b[..., :1 + L],
+                    jnp.minimum(a[..., 1 + L:1 + 2 * L],
+                                b[..., 1 + L:1 + 2 * L]),
+                    jnp.maximum(a[..., 1 + 2 * L:], b[..., 1 + 2 * L:])],
+                    axis=-1)
+
+            return jax.lax.associative_scan(comb, table, axis=0)
+
+        _PREFIX_JIT = pf
+    return _PREFIX_JIT(table)
 
 
 # ========================================================== pallas backend
@@ -751,11 +1118,36 @@ class PallasBackend(ComputeBackend):
             return np.asarray(fold_segments(packed, n_segments=ns))
         return _fold_blocks(seg_ids, values, n_segments, tree)
 
+    def fold_segments_scan(self, seg_ids, values, n_segments):
+        # the scan is an XLA structural op — there's no MXU-shaped inner
+        # reduction left to kernelize — so this backend shares the jitted
+        # scan path (bitwise equal to numpy/jax by the same bit-reversal
+        # argument)
+        return JaxBackend.fold_segments_scan(self, seg_ids, values,
+                                             n_segments)
+
+    def batch_gather_stats(self, table, seg_ids):
+        import jax.numpy as jnp
+        from repro.kernels.segment_kpi.ops import gather_stats
+        idx = np.asarray(seg_ids, np.int64)
+        if not len(idx):
+            L = (np.asarray(table).shape[1] - 1) // 3
+            return np.zeros((0, gather_width(L)), np.float32)
+        self.op_dispatches += 1
+        self.host_syncs += 1
+        return np.asarray(gather_stats(
+            jnp.asarray(np.asarray(table, np.float32)), idx))
+
+    def prefix_fold(self, table):
+        # same structural-op argument as fold_segments_scan
+        return JaxBackend.prefix_fold(self, table)
+
 
 __all__ = [
     "ComputeBackend", "FactBlock", "NumpyBackend", "JaxBackend",
     "PallasBackend", "register_backend", "get_backend",
     "available_backends", "resolve_backend_name", "DEFAULT_BACKEND",
-    "ENV_VAR", "KPI_LANES", "FOLD_BLOCK", "fold_width", "empty_fold_state",
-    "combine_fold",
+    "ENV_VAR", "KPI_LANES", "FOLD_BLOCK", "fold_width", "gather_width",
+    "empty_fold_state", "combine_fold", "bitrev_permutation",
+    "prefix_fold_reference",
 ]

@@ -15,6 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.segment_kpi.segment_kpi import (fold_segments_kernel,
+                                                   gather_stats_kernel,
                                                    segment_kpi_kernel,
                                                    segment_rollup_kernel)
 
@@ -73,5 +74,22 @@ def fold_segments(packed, *, n_segments: int = 32, block: int = 256):
          agg[:, :, 1 + 2 * L:].max(axis=0)], axis=-1)
 
 
-__all__ = ["fold_segments", "fold_segments_kernel", "segment_kpi",
-           "segment_kpi_kernel", "segment_rollup", "segment_rollup_kernel"]
+def gather_stats(table, idx, *, block: int = 256):
+    """Batched point-query gather against a packed [S, 1+3L] fold table:
+    returns [len(idx), 1+4L] ([count | sums | mins | maxs | means]) in one
+    kernel dispatch. ``idx`` int segment ids in [0, S); pads the batch to
+    a block multiple with id 0 (valid row, sliced off after)."""
+    idx = jnp.asarray(idx, jnp.float32)[:, None]          # [N, 1]
+    n = idx.shape[0]
+    pad = (-n) % block
+    if pad:
+        idx = jnp.concatenate([idx, jnp.zeros((pad, 1), jnp.float32)])
+    on_tpu = jax.default_backend() == "tpu"
+    out = gather_stats_kernel(table, idx, block=block,
+                              interpret=not on_tpu)
+    return out[:n]
+
+
+__all__ = ["fold_segments", "fold_segments_kernel", "gather_stats",
+           "gather_stats_kernel", "segment_kpi", "segment_kpi_kernel",
+           "segment_rollup", "segment_rollup_kernel"]

@@ -110,6 +110,71 @@ def _fold_kernel(packed_ref, out_ref, *, n_segments: int, n_lanes: int,
         axis=-1)                                          # [S, 1+3L]
 
 
+def _gather_kernel(table_ref, idx_ref, out_ref, *, n_segments: int,
+                   n_lanes: int, block: int):
+    """Batched read-path gather: for each query row, pick one segment's
+    packed fold stats out of the full [S, 1+3L] view table and derive the
+    lane means — the whole batch in one kernel pass.
+
+    count + sums ride the MXU as a one-hot matmul (exact: each one-hot row
+    selects a single finite table row); min/max lanes use masked VPU
+    reductions instead, because the table's empty-segment identities are
+    ±inf and ``0 * inf`` would poison a matmul gather with NaNs."""
+    table = table_ref[...]                                # [S, 1+3L]
+    idx = idx_ref[...][:, 0].astype(jnp.int32)            # [B]
+    L = n_lanes
+
+    iota = jax.lax.broadcasted_iota(jnp.int32, (block, n_segments), 1)
+    hit = iota == idx[:, None]                            # [B, S] bool
+    onehot = hit.astype(jnp.float32)
+    cnt_sums = jax.lax.dot_general(                       # [B, 1+L]
+        onehot, table[:, :1 + L],
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    mins = []
+    maxs = []
+    for j in range(L):                                    # static lane loop
+        mincol = jnp.broadcast_to(table[:, 1 + L + j][None, :],
+                                  (block, n_segments))
+        maxcol = jnp.broadcast_to(table[:, 1 + 2 * L + j][None, :],
+                                  (block, n_segments))
+        mins.append(jnp.min(jnp.where(hit, mincol, jnp.inf), axis=1))
+        maxs.append(jnp.max(jnp.where(hit, maxcol, -jnp.inf), axis=1))
+
+    cnt = cnt_sums[:, :1]
+    means = jnp.where(cnt > 0, cnt_sums[:, 1:] / cnt, jnp.nan)
+    out_ref[...] = jnp.concatenate(
+        [cnt_sums, jnp.stack(mins, axis=-1), jnp.stack(maxs, axis=-1),
+         means], axis=-1)                                 # [B, 1+4L]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def gather_stats_kernel(table: jax.Array, idx: jax.Array, *,
+                        block: int = 256, interpret: bool = True):
+    """table [S, 1+3L] packed fold stats; idx [N, 1] f32 segment ids
+    (exact below 2^24), N % block == 0, every id in [0, S). Returns
+    [N, 1+4L]: [count | sums | mins | maxs | means] per query row."""
+    n = idx.shape[0]
+    s, w = table.shape
+    n_lanes = (w - 1) // 3
+    assert n % block == 0
+    nb = n // block
+    width = 1 + 4 * n_lanes
+    kernel = functools.partial(_gather_kernel, n_segments=s,
+                               n_lanes=n_lanes, block=block)
+    return pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((s, w), lambda i: (0, 0)),       # full table
+            pl.BlockSpec((block, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[pl.BlockSpec((block, width), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((n, width), jnp.float32)],
+        interpret=interpret,
+    )(table, idx)[0]
+
+
 @functools.partial(jax.jit,
                    static_argnames=("n_segments", "block", "interpret"))
 def fold_segments_kernel(packed: jax.Array, *, n_segments: int = 32,

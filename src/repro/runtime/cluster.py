@@ -477,9 +477,12 @@ class ConcurrentCluster:
         self.cap = max_records_per_partition
         self.poll_cdc = poll_cdc
         # optional BI serving stage: a MaterializedViewEngine (or a
-        # ReportServer wrapping one) whose maintenance thread runs with the
-        # cluster; worker load stages publish fact deltas to it via the
-        # warehouse hook, and cluster reports include its epoch/staleness
+        # ReportServer / BatchedReportServer wrapping one) whose
+        # maintenance thread runs with the cluster; worker load stages
+        # publish fact deltas to it via the warehouse hook, and cluster
+        # reports include its epoch/staleness (+ batch-front stats when a
+        # batching front is attached)
+        self.serving_front = serving if hasattr(serving, "submit") else None
         self.serving = getattr(serving, "engine", serving)
         if self.serving is not None:
             pipe.warehouse.attach_serving(self.serving)
@@ -500,6 +503,8 @@ class ConcurrentCluster:
         self._t_start = time.perf_counter()
         if self.serving is not None:
             self.serving.start()         # view-maintenance stage
+        if self.serving_front is not None:
+            self.serving_front.start()   # batched-query admission front
         for rt in self.runtimes.values():
             rt.start()
         if self.poll_cdc:
@@ -523,6 +528,8 @@ class ConcurrentCluster:
             self._extract_thread = None
         for rt in self.runtimes.values():
             rt.join()
+        if self.serving_front is not None:
+            self.serving_front.stop()    # drains admitted queries first
         if self.serving is not None:
             self.serving.stop()          # folds the remaining delta backlog
 
@@ -548,6 +555,10 @@ class ConcurrentCluster:
         out.update(self.freshness())
         if self.serving is not None:
             out["serving"] = self.serving.report()
+            if self.serving_front is not None:
+                out["serving"].update(
+                    {f"batch_{k}": v
+                     for k, v in self.serving_front.stats().items()})
         return out
 
     # ------------------------------------------------------------ idle waiting

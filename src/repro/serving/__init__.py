@@ -9,12 +9,18 @@ paper's 'near real-time reports previously unavailable' claim is about).
             ``fold_segments`` op; publishes immutable epochs
   server  — ``ReportServer``: O(n_segments) report queries with epoch +
             staleness stamps
+  batch   — batched query plane: packed query plans answering thousands
+            of heterogeneous queries in one backend dispatch per view,
+            plus the ``BatchedReportServer`` admission front
 """
+from repro.serving.batch import (BatchedReportServer,  # noqa: F401
+                                 BatchResult, BatchTicket, QueryPlan,
+                                 ReportQuery, compile_queries)
 from repro.serving.engine import (EpochSnapshot, FactDelta,  # noqa: F401
                                   MaterializedViewEngine, ViewState,
                                   serving_clock)
 from repro.serving.server import (Report, ReportServer,  # noqa: F401
-                                  ReportSnapshot)
+                                  ReportSnapshot, downtime_rank_keys)
 from repro.serving.views import (ViewSpec,  # noqa: F401
                                  downtime_by_equipment, kpi_by_unit_shift,
                                  oee_by_equipment, production_rate_windows,
@@ -24,5 +30,7 @@ __all__ = [
     "EpochSnapshot", "FactDelta", "MaterializedViewEngine", "ViewState",
     "serving_clock", "Report", "ReportServer", "ReportSnapshot", "ViewSpec",
     "downtime_by_equipment", "kpi_by_unit_shift", "oee_by_equipment",
-    "production_rate_windows", "steelworks_views",
+    "production_rate_windows", "steelworks_views", "downtime_rank_keys",
+    "BatchedReportServer", "BatchResult", "BatchTicket", "QueryPlan",
+    "ReportQuery", "compile_queries",
 ]

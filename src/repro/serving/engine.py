@@ -61,6 +61,9 @@ def serving_clock() -> float:
     return time.perf_counter()
 
 
+_MISS = object()   # memo sentinel (cached values may legitimately be falsy)
+
+
 @dataclasses.dataclass(frozen=True)
 class FactDelta:
     """One published fact block: the unit of incremental maintenance.
@@ -121,9 +124,33 @@ class EpochSnapshot:
     watermark_event_time: float              # newest CDC event time folded
     rows_folded: int                         # fact rows folded so far
     deltas_folded: int
+    # per-epoch memo for derivations every reader of this epoch shares
+    # (per-view means, downtime ranking, cumulative window folds): the
+    # aggregate state is immutable, so a derivation computed once is valid
+    # for the epoch's whole lifetime. Excluded from equality/repr — the
+    # cache is an optimization, not state.
+    _memo: dict = dataclasses.field(default_factory=dict, repr=False,
+                                    compare=False)
+    _memo_lock: threading.Lock = dataclasses.field(
+        default_factory=threading.Lock, repr=False, compare=False)
 
     def view(self, name: str) -> ViewState:
         return self.states[name]
+
+    def shared(self, key, compute):
+        """Compute-once derivation shared by every reader pinning this
+        epoch: first caller under ``key`` runs ``compute()``, everyone
+        else gets the cached value (double-checked under the epoch's
+        lock, so concurrent readers never duplicate the work)."""
+        memo = self._memo
+        hit = memo.get(key, _MISS)
+        if hit is not _MISS:
+            return hit
+        with self._memo_lock:
+            hit = memo.get(key, _MISS)
+            if hit is _MISS:
+                memo[key] = hit = compute()
+            return hit
 
     def staleness_ms(self, now: Optional[float] = None) -> float:
         """Age of this epoch's data: clock-now minus the newest CDC event
@@ -147,13 +174,19 @@ class MaterializedViewEngine:
     """
 
     def __init__(self, specs: Sequence[ViewSpec], backend=None,
-                 idle_backoff_s: float = 0.001):
+                 idle_backoff_s: float = 0.001, scan_fold: bool = False):
         names = [s.name for s in specs]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate view names: {names}")
         self.specs: Tuple[ViewSpec, ...] = tuple(specs)
         self.backend = get_backend(backend)
         self.idle_backoff_s = idle_backoff_s
+        # scan_fold: fold WINDOWED views through the backend's
+        # associative-scan form instead of the unrolled halving tree.
+        # Bitwise-identical output (so every determinism/rebuild oracle
+        # still holds) but measured slower on CPU hosts — off by default;
+        # see docs/BENCHMARKS.md "scan fold" for the numbers.
+        self.scan_fold = bool(scan_fold)
         self.staleness_recorder = LatencyRecorder()
         self._pending: "deque[FactDelta]" = deque()
         self._q_lock = threading.Lock()      # guards the pending deque
@@ -212,9 +245,11 @@ class MaterializedViewEngine:
                 vfacts = d.facts[valid]
                 rows += len(d.facts)
                 for spec in self.specs:
-                    agg = self.backend.fold_segments(
-                        spec.segments(vfacts), spec.values(vfacts),
-                        spec.n_segments)
+                    fold = (self.backend.fold_segments_scan
+                            if self.scan_fold and spec.windowed
+                            else self.backend.fold_segments)
+                    agg = fold(spec.segments(vfacts), spec.values(vfacts),
+                               spec.n_segments)
                     tables[spec.name] = combine_fold(tables[spec.name], agg)
                 watermark = max(watermark,
                                 float(d.event_times.max())
@@ -281,6 +316,33 @@ class MaterializedViewEngine:
                     np.zeros((FOLD_BLOCK, n_lanes), np.float32),
                     n_segments)
                 width *= 2
+        if self.scan_fold:                 # scan-form fold, windowed views
+            for spec in self.specs:
+                if not spec.windowed:
+                    continue
+                m = 8
+                while m <= FOLD_BLOCK:
+                    self.backend.fold_segments_scan(
+                        np.arange(m, dtype=np.int64) % spec.n_segments,
+                        np.zeros((m, spec.n_lanes), np.float32),
+                        spec.n_segments)
+                    m *= 2
+
+    def prewarm_read(self, batch_buckets: Sequence[int] = (8, 256, 1024,
+                                                           4096)) -> None:
+        """Compile the batched read path's dispatch shapes: one
+        ``batch_gather_stats`` compile per (view shape, batch bucket) and
+        one ``prefix_fold`` compile per windowed view, so the first live
+        query batch never stalls behind jit. No-op for host backends."""
+        if not self.backend.device:
+            return
+        for spec in self.specs:
+            table = empty_fold_state(spec.n_segments, spec.n_lanes)
+            for b in batch_buckets:
+                self.backend.batch_gather_stats(
+                    table, np.zeros(b, np.int64))
+            if spec.windowed:
+                self.backend.prefix_fold(table)
 
     # -------------------------------------------------------------- maintenance
     def start(self) -> None:
@@ -322,13 +384,14 @@ class MaterializedViewEngine:
     # ------------------------------------------------------------------ oracle
     @classmethod
     def rebuild(cls, specs: Sequence[ViewSpec],
-                chunks: Iterable[np.ndarray], backend=None
-                ) -> EpochSnapshot:
+                chunks: Iterable[np.ndarray], backend=None,
+                scan_fold: bool = False) -> EpochSnapshot:
         """Recompute-from-scratch oracle: replay a committed chunk log
         (e.g. ``StarSchemaWarehouse.read_view().chunks``) through a fresh
         engine. Same per-delta fold path, same order — the result is
-        byte-identical to the incrementally maintained state."""
-        eng = cls(specs, backend=backend)
+        byte-identical to the incrementally maintained state (with either
+        fold form: scan and tree are bitwise-identical)."""
+        eng = cls(specs, backend=backend, scan_fold=scan_fold)
         for chunk in chunks:
             eng.publish(chunk)
             eng.fold_pending()

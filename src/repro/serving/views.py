@@ -41,6 +41,9 @@ class ViewSpec:
     segments: Callable[[np.ndarray], np.ndarray]
     values: Callable[[np.ndarray], np.ndarray]
     segment_names: Tuple[str, ...] = ()   # optional segment labels
+    windowed: bool = False   # segments are ordered time windows: cumulative
+                             # prefix reads make sense and the engine may
+                             # fold deltas via the scan-form op
 
     @property
     def n_lanes(self) -> int:
@@ -101,7 +104,8 @@ def production_rate_windows(n_windows: int = 32,
         name="production_rate_windows", n_segments=n_windows,
         lanes=("runtime_s", "oee"),
         segments=seg,
-        values=lambda f: _cols(f, [7, 6]))
+        values=lambda f: _cols(f, [7, 6]),
+        windowed=True)
 
 
 def steelworks_views(n_units: int, n_shifts: int = 3,

@@ -1,0 +1,404 @@
+"""Batched read-path tests: packed query plans byte-identical to the
+per-query loop on every backend, scan-form folds bitwise-equal to the
+halving tree, prefix folds bitwise-equal to the block-chained tree
+oracle, argpartition top-k == lexsort, per-epoch memoization, and the
+admission front's pinned-epoch batching (including batches that span an
+epoch swap)."""
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.backend import (bitrev_permutation, empty_fold_state,
+                                fold_width, gather_width, get_backend,
+                                prefix_fold_reference)
+from repro.data.sampler import synthetic_facts
+from repro.serving import (BatchedReportServer, MaterializedViewEngine,
+                           ReportQuery, ReportServer, ReportSnapshot,
+                           compile_queries, downtime_by_equipment,
+                           downtime_rank_keys, steelworks_views)
+
+N_UNITS = 8
+BACKENDS = ["numpy", "jax", "pallas"]
+
+
+def loaded_server(backend="numpy", n_deltas=4, rows=400, seed=0,
+                  scan_fold=False):
+    rng = np.random.default_rng(seed)
+    eng = MaterializedViewEngine(steelworks_views(N_UNITS), backend=backend,
+                                 scan_fold=scan_fold)
+    for i in range(n_deltas):
+        facts = synthetic_facts(rng, rows, N_UNITS, valid_frac=0.85)
+        eng.publish(facts, event_times=np.full(len(facts), float(i)))
+        eng.fold_pending()
+    return ReportServer(eng)
+
+
+HETERO_QUERIES = (
+    [ReportQuery("oee", unit=u) for u in range(N_UNITS)]
+    + [ReportQuery("view", view="oee_by_equipment"),
+       ReportQuery("view", view="production_rate_windows"),
+       ReportQuery("oee"),                       # fleet-wide
+       ReportQuery("top_downtime", k=3),
+       ReportQuery("top_downtime", k=N_UNITS + 5),
+       ReportQuery("production_rate"),
+       ReportQuery("production_curve"),
+       ReportQuery("shift_report"),
+       ReportQuery("kpi_rollup"),
+       ReportQuery("oee", unit=N_UNITS - 1)])    # duplicate point query
+
+
+def single_query(rs, q):
+    """The per-query loop the batch plane must reproduce byte-for-byte."""
+    return {"view": lambda: rs.query(q.view),
+            "oee": lambda: rs.oee(q.unit),
+            "top_downtime": lambda: rs.top_downtime(q.k),
+            "production_rate": rs.production_rate,
+            "production_curve": rs.production_curve,
+            "shift_report": rs.shift_report,
+            "kpi_rollup": rs.kpi_rollup}[q.kind]()
+
+
+def assert_report_equal(batched, oracle, qkind):
+    if qkind == "kpi_rollup":
+        assert batched.data["kpi_rollup"].tobytes() == oracle.tobytes()
+        return
+    assert batched.epoch == oracle.epoch
+    assert batched.rows == oracle.rows
+    assert set(batched.data) == set(oracle.data)
+    for key, want in oracle.data.items():
+        got = batched.data[key]
+        if isinstance(want, np.ndarray):
+            assert np.asarray(got).tobytes() == want.tobytes(), key
+        elif isinstance(want, float):
+            assert got == want or (math.isnan(got) and math.isnan(want)), key
+        else:
+            assert got == want, key
+
+
+# ===================================================== batched query parity
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_batched_parity_every_kind_every_backend(backend):
+    """One plan-execute answers a mixed heterogeneous batch byte-identically
+    to the per-query loop on the SAME pinned snapshot."""
+    srv = loaded_server(backend)
+    rs = srv.snapshot()
+    res = compile_queries(HETERO_QUERIES).execute(rs)
+    reports = res.reports()
+    assert len(reports) == len(HETERO_QUERIES)
+    for q, rep in zip(HETERO_QUERIES, reports):
+        assert_report_equal(rep, single_query(rs, q), q.kind)
+
+
+def test_batched_point_dispatch_is_one_gather():
+    """A thousand per-unit OEE queries cost ONE backend dispatch, not a
+    thousand."""
+    srv = loaded_server("numpy")
+    rs = srv.snapshot()
+    plan = compile_queries([ReportQuery("oee", unit=i % N_UNITS)
+                            for i in range(1000)])
+    b = srv.engine.backend
+    before = b.op_dispatches
+    res = plan.execute(rs)
+    assert b.op_dispatches - before == 1
+    assert res.point_stats[0].shape == (1000, gather_width(4))
+
+
+def test_empty_and_singleton_batches():
+    srv = loaded_server("numpy")
+    rs = srv.snapshot()
+    empty = compile_queries([]).execute(rs)
+    assert len(empty) == 0 and empty.reports() == []
+    one = compile_queries([ReportQuery("oee", unit=3)]).execute(rs)
+    assert_report_equal(one.reports()[0], rs.oee(3), "oee")
+
+
+def test_plan_reuse_across_epochs_monotonic_stamps():
+    """A compiled plan is epoch-agnostic: re-executing it against newer
+    snapshots yields strictly monotonic epoch stamps and fresh data."""
+    srv = loaded_server("numpy", n_deltas=1)
+    plan = compile_queries(HETERO_QUERIES)
+    rng = np.random.default_rng(7)
+    epochs = []
+    for i in range(4):
+        res = plan.execute(srv.snapshot())
+        epochs.append(res.epoch)
+        for rep in res.reports():
+            assert rep.epoch == res.epoch
+        facts = synthetic_facts(rng, 100, N_UNITS, valid_frac=0.9)
+        srv.engine.publish(facts, event_times=np.full(100, float(i)))
+        srv.engine.fold_pending()
+    assert epochs == sorted(epochs) and len(set(epochs)) == len(epochs)
+
+
+def test_compile_validation():
+    with pytest.raises(ValueError):
+        compile_queries([ReportQuery("nonsense")])
+    with pytest.raises(ValueError):
+        compile_queries([ReportQuery("view")])          # view required
+    with pytest.raises(ValueError):
+        compile_queries([ReportQuery("top_downtime", k=0)])
+    with pytest.raises(ValueError):
+        compile_queries([ReportQuery("oee", unit=-2)])
+    srv = loaded_server("numpy")
+    plan = compile_queries([ReportQuery("oee", unit=N_UNITS + 7)])
+    with pytest.raises(ValueError):                     # out of range at exec
+        plan.execute(srv.snapshot())
+
+
+def test_descriptor_roundtrip():
+    """The packed wire format reconstructs an equivalent plan."""
+    from repro.serving.batch import QueryPlan
+    srv = loaded_server("numpy")
+    rs = srv.snapshot()
+    plan = compile_queries(HETERO_QUERIES)
+    clone = QueryPlan(*plan.descriptors(), views=plan.views)
+    a = plan.execute(rs).reports()
+    b = clone.execute(rs).reports()
+    for q, ra, rb in zip(HETERO_QUERIES, a, b):
+        if q.kind == "kpi_rollup":
+            assert ra.data["kpi_rollup"].tobytes() == \
+                rb.data["kpi_rollup"].tobytes()
+        else:
+            assert_report_equal(ra, rb, q.kind)
+
+
+# ========================================================== admission front
+def test_front_batches_concurrent_submitters():
+    srv = loaded_server("numpy")
+    rs = srv.snapshot()          # engine idle -> same epoch throughout
+    front = BatchedReportServer(srv, max_batch=256, max_wait_ms=20.0)
+    front.start()
+    results = {}
+
+    def submitter(tid):
+        tickets = [(q, front.submit(q)) for q in HETERO_QUERIES]
+        results[tid] = [(q, t.result(10.0)) for q, t in tickets]
+
+    threads = [threading.Thread(target=submitter, args=(i,))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    front.stop()
+    for tid in results:
+        for q, rep in results[tid]:
+            assert_report_equal(rep, single_query(rs, q), q.kind)
+    st = front.stats()
+    assert st["queries"] == 4 * len(HETERO_QUERIES)
+    assert st["max_batch"] > 1          # coalescing actually happened
+
+
+def test_front_batch_spanning_two_epochs():
+    """Queries pinned before and after a fold land in ONE coalesced batch
+    but carry their OWN epoch/staleness stamps."""
+    srv = loaded_server("numpy", n_deltas=2)
+    front = BatchedReportServer(srv, max_batch=64, max_wait_ms=50.0)
+    # admit with no dispatcher running, fold between admissions, then drain
+    t1 = [front.submit(ReportQuery("oee", unit=u)) for u in range(N_UNITS)]
+    rng = np.random.default_rng(3)
+    facts = synthetic_facts(rng, 200, N_UNITS, valid_frac=0.9)
+    srv.engine.publish(facts, event_times=np.full(200, 9.0))
+    srv.engine.fold_pending()
+    t2 = [front.submit(ReportQuery("oee", unit=u)) for u in range(N_UNITS)]
+    e1 = {t.result(10.0).epoch for t in t1}
+    e2 = {t.result(10.0).epoch for t in t2}
+    assert len(e1) == 1 and len(e2) == 1
+    assert e2 != e1                      # each query kept its pinned epoch
+    # and each group's answers match a direct read of its own snapshot
+    for u, t in enumerate(t1):
+        oracle = ReportSnapshot(t.snapshot, srv.engine.backend).oee(u)
+        assert_report_equal(t.result(), oracle, "oee")
+
+
+def test_front_accepts_bare_engine_and_stops_clean():
+    srv = loaded_server("numpy")
+    front = BatchedReportServer(srv.engine, max_batch=8, max_wait_ms=1.0)
+    front.start()
+    t = front.submit(ReportQuery("production_rate"))
+    rep = t.result(10.0)
+    front.stop()
+    assert rep.view == "production_rate_windows"
+
+
+# ================================================= scan fold bitwise parity
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("case,make", [
+    ("empty", lambda rng, S: np.empty(0, np.int64)),
+    ("single_row", lambda rng, S: np.array([S // 2])),
+    ("single_segment", lambda rng, S: np.full(300, S - 1)),
+    ("all_segments", lambda rng, S: np.arange(3 * S) % S),
+    ("out_of_range", lambda rng, S: rng.integers(-3, S + 3, 500)),
+    ("sparse", lambda rng, S: rng.choice([1, S - 2], 200)),
+    ("multi_block", lambda rng, S: rng.integers(0, S, 5000)),
+])
+def test_fold_segments_scan_bitwise_equals_tree(backend, case, make):
+    """The associative-scan fold is bitwise-identical to the halving tree
+    on EVERY backend (bit-reversal aligns the combine orders) — so either
+    form satisfies the serving layer's determinism contract."""
+    rng = np.random.default_rng(5)
+    S, L = 32, 2
+    seg = np.asarray(make(rng, S), np.int64)
+    vals = rng.normal(scale=4, size=(len(seg), L)).astype(np.float32)
+    tree = get_backend("numpy").fold_segments(seg, vals, S)
+    scan = get_backend(backend).fold_segments_scan(seg, vals, S)
+    assert scan.tobytes() == tree.tobytes()
+
+
+def test_bitrev_permutation_contract():
+    assert list(bitrev_permutation(8)) == [0, 4, 2, 6, 1, 5, 3, 7]
+    assert list(bitrev_permutation(1)) == [0]
+    with pytest.raises(ValueError):
+        bitrev_permutation(6)
+
+
+def test_engine_scan_fold_byte_identical_state():
+    """An engine folding windowed views through the scan op publishes
+    byte-identical epochs to the tree engine (and rebuild stays a valid
+    oracle for both)."""
+    rng = np.random.default_rng(11)
+    chunks = [synthetic_facts(rng, 300, N_UNITS, valid_frac=0.8)
+              for _ in range(3)]
+    tree_snap = MaterializedViewEngine.rebuild(
+        steelworks_views(N_UNITS), chunks, backend="numpy")
+    scan_snap = MaterializedViewEngine.rebuild(
+        steelworks_views(N_UNITS), chunks, backend="numpy", scan_fold=True)
+    for name, st in tree_snap.states.items():
+        assert st.table.tobytes() == scan_snap.states[name].table.tobytes()
+
+
+# ================================================ prefix fold (curve) parity
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_prefix_fold_bitwise_equals_reference(backend):
+    rng = np.random.default_rng(6)
+    for S, L, n in [(1, 1, 4), (5, 2, 40), (32, 2, 200), (100, 3, 700)]:
+        seg = rng.integers(0, max(S - 2, 1), n)    # leave empty windows
+        vals = rng.normal(size=(n, L)).astype(np.float32)
+        table = get_backend("numpy").fold_segments(seg, vals, S)
+        out = get_backend(backend).prefix_fold(table)
+        assert out.shape == (S, fold_width(L))
+        assert out.tobytes() == prefix_fold_reference(table).tobytes()
+
+
+def test_prefix_fold_identity_and_empty():
+    nb = get_backend("numpy")
+    ident = empty_fold_state(16, 2)
+    out = nb.prefix_fold(ident)
+    assert out.tobytes() == ident.tobytes()     # identity is absorbing
+    assert nb.prefix_fold(np.zeros((0, 7), np.float32)).shape == (0, 7)
+
+
+def test_production_curve_semantics():
+    """Curve row w == plain combine of windows [0, w] (values, not just
+    bit-association): cross-check counts and sums against a direct
+    recompute."""
+    srv = loaded_server("numpy")
+    rs = srv.snapshot()
+    st = rs.snap.view("production_rate_windows")
+    rep = rs.production_curve()
+    want = np.cumsum(st.count)
+    np.testing.assert_array_equal(rep.data["count"], want)
+    np.testing.assert_allclose(rep.data["sum"], np.cumsum(st.sums, axis=0),
+                               rtol=1e-5, atol=1e-5)
+    # min/max are running extrema over non-empty windows
+    run_min = np.minimum.accumulate(st.mins, axis=0)
+    np.testing.assert_array_equal(rep.data["min"], run_min)
+    with pytest.raises(ValueError):
+        rs.production_curve("oee_by_equipment")   # not windowed
+
+
+# ==================================================== top-k downtime parity
+def test_topk_matches_lexsort_including_ties():
+    down = np.array([5.0, 5.0, 1.0, 9.0, 5.0, 0.0, -0.0, 9.0], np.float32)
+    up = 100.0 - down
+    eng = MaterializedViewEngine([downtime_by_equipment(len(down))],
+                                 backend="numpy")
+    facts = np.zeros((len(down), 10), np.float32)
+    facts[:, 0] = np.arange(len(down))
+    facts[:, 8] = down
+    facts[:, 7] = up
+    facts[:, 9] = 1.0
+    eng.publish(facts)
+    eng.fold_pending()
+    rs = ReportServer(eng).snapshot()
+    lane = rs.snap.view("downtime_by_equipment").sums[:, 0]
+    oracle = np.lexsort((np.arange(len(lane)), -lane))
+    for k in (1, 2, 3, len(down), len(down) + 10):
+        rep = rs.top_downtime(k)
+        np.testing.assert_array_equal(rep.data["unit"],
+                                      oracle[:min(k, len(down))])
+    # -0.0 and +0.0 rank as equal (tie broken by unit id)
+    keys = downtime_rank_keys(np.array([0.0, -0.0], np.float32))
+    assert (keys >> np.uint64(32))[0] == (keys >> np.uint64(32))[1]
+
+
+def test_rank_keys_reproduce_lexsort_on_random_lanes():
+    rng = np.random.default_rng(9)
+    for _ in range(20):
+        down = rng.choice([0.0, 1.5, 1.5, 7.25, -3.0, 7.25],
+                          size=rng.integers(1, 40)).astype(np.float32)
+        oracle = np.lexsort((np.arange(len(down)), -down))
+        got = np.argsort(downtime_rank_keys(down))
+        np.testing.assert_array_equal(got, oracle)
+
+
+# ================================================ memoization + read-only
+def test_epoch_memo_shared_across_readers():
+    srv = loaded_server("numpy")
+    rs1, rs2 = srv.snapshot(), srv.snapshot()
+    assert rs1.snap is rs2.snap
+    a = rs1.query("oee_by_equipment").data["mean"]
+    b = rs2.query("oee_by_equipment").data["mean"]
+    assert a is b                        # computed once per epoch
+    assert rs1.kpi_rollup() is rs2.kpi_rollup()
+    assert rs1.production_curve().data["count"].base is \
+        rs2.production_curve().data["count"].base
+    # a new epoch gets a fresh memo
+    srv.engine.publish(synthetic_facts(np.random.default_rng(2), 50,
+                                       N_UNITS, valid_frac=1.0))
+    srv.engine.fold_pending()
+    assert srv.snapshot().query("oee_by_equipment").data["mean"] is not a
+
+
+def test_memo_concurrent_readers_compute_once():
+    srv = loaded_server("numpy")
+    snap = srv.engine.snapshot()
+    calls = []
+    barrier = threading.Barrier(8)
+
+    def compute():
+        calls.append(1)
+        return object()
+
+    got = []
+
+    def reader():
+        barrier.wait()
+        got.append(snap.shared("k", compute))
+
+    threads = [threading.Thread(target=reader) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(calls) == 1 and all(g is got[0] for g in got)
+
+
+def test_report_payloads_are_read_only_views():
+    srv = loaded_server("numpy")
+    rs = srv.snapshot()
+    for rep in (rs.query("oee_by_equipment"), rs.production_rate(),
+                rs.shift_report(), rs.production_curve(),
+                rs.top_downtime(3)):
+        for v in rep.data.values():
+            if isinstance(v, np.ndarray) and v.size:
+                writeable = v.flags.writeable
+                owns = v.base is None and v.flags.owndata
+                # views of epoch state must be frozen; small per-query
+                # materializations (top-k gathers) may own their memory
+                assert owns or not writeable
+    assert not rs.kpi_rollup().flags.writeable
+    with pytest.raises(ValueError):
+        rs.query("oee_by_equipment").data["count"][0] = 99.0
