@@ -70,6 +70,14 @@ GATES: Dict[str, List[Tuple[str, str]]] = {
         ("gates.cache_retention", "higher"),
         ("gates.imbalance_post", "lower"),
     ],
+    "BENCH_recovery_smoke.json": [
+        ("gates.complete", "bool"),
+        ("gates.byte_identical", "bool"),
+        ("gates.kill9_exactly_once", "bool"),
+        ("gates.sublinear_ok", "bool"),
+        ("overhead.checkpoint_overhead_ratio", "lower"),
+        ("scaling.recovery_speedup_vs_cold", "higher"),
+    ],
 }
 
 

@@ -64,6 +64,12 @@ def main() -> None:
     from benchmarks import skewed_load as SK
     emit("skew", SK.summary(quick=args.quick))
 
+    # crash-consistent durability: recovery cost vs history length +
+    # kill -9 exactly-once drill (full sweep:
+    # python -m benchmarks.recovery_bench -> BENCH_recovery.json)
+    from benchmarks import recovery_bench as RB
+    emit("recovery", RB.summary(quick=args.quick))
+
     # roofline summary (if the dry-run matrix has been produced)
     try:
         from benchmarks.roofline import load_cells, roofline_fraction

@@ -11,6 +11,7 @@ The Message Producer partitions extracted records per the table nature
 """
 from __future__ import annotations
 
+import threading
 import time
 from typing import Dict, List, Optional
 
@@ -65,6 +66,12 @@ class ChangeTracker:
         self.cfg = cfg
         self.listeners: List[Listener] = []
         self.table_ids: Dict[str, int] = {}
+        # extraction lock: a durability capture acquires it so listener
+        # offsets and broker content are snapshotted at a poll boundary —
+        # capturing between a Listener's publish and its offset advance
+        # would journal the records AND an offset that re-extracts them
+        # (duplicates on replay)
+        self.lock = threading.Lock()
         for tid, table in enumerate(cfg.tables):
             self.table_ids[table.name] = tid
             topic_name = f"topic.{table.name}"
@@ -86,7 +93,8 @@ class ChangeTracker:
         detour on a cold start."""
         ordered = sorted(self.listeners,
                          key=lambda l: l.table.nature != "master")
-        return sum(l.poll(limit_per_table) for l in ordered)
+        with self.lock:
+            return sum(l.poll(limit_per_table) for l in ordered)
 
     def topic_of(self, table_name: str) -> str:
         return f"topic.{table_name}"

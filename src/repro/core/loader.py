@@ -65,17 +65,63 @@ class StarSchemaWarehouse:
         self._kpi_gap_rows = 0
 
     # ------------------------------------------------------------ serving hook
-    def attach_serving(self, engine):
+    def attach_serving(self, engine, replay_from: int = 0):
         """Wire a view engine: every committed load is published as one
         fact delta, in commit order (the publish happens under the load
         lock, so delta order == chunk-log order — what makes the engine's
         ``rebuild`` oracle byte-identical). History already loaded is
-        replayed first. Returns the engine for chaining."""
+        replayed first, starting at chunk ``replay_from`` — recovery
+        passes the engine's restored ``deltas_folded`` so only the
+        post-checkpoint suffix replays (every committed chunk is
+        non-empty, so chunk indices and delta sequence align 1:1).
+        Idempotent for an already-attached engine (the recovery path
+        attaches before handing the pipeline to a cluster whose
+        constructor attaches again — a second full replay would
+        double-fold history). Returns the engine for chaining."""
         with self._lock:
-            for chunk in self._chunk_log:
+            if engine is self._serving:
+                return engine
+            for chunk in self._chunk_log[replay_from:]:
                 engine.publish(chunk)
             self._serving = engine
         return engine
+
+    # ------------------------------------------------------------- durability
+    def export_state(self, from_seq: int = 0) -> Dict:
+        """Journal capture at a commit boundary: the chunk-log SUFFIX
+        past ``from_seq`` (``commit_seq == len(_chunk_log)`` — one
+        committed chunk per commit) plus the full counter state."""
+        with self._lock:
+            return {
+                "chunks": list(self._chunk_log[from_seq:]),
+                "seq": int(self.commit_seq),
+                "rows": int(self.rows_loaded),
+                "load_calls": int(self.load_calls),
+                "kpi_running": (None if self._kpi_running is None
+                                else self._kpi_running.copy()),
+                "kpi_gap_rows": int(self._kpi_gap_rows),
+            }
+
+    def restore_state(self, state: Dict) -> None:
+        """Cold-restart restore into an empty warehouse. ``state`` is the
+        journal-accumulated form (chunks = the FULL committed log). Must
+        run before ``attach_serving``: the chunks land silently, and the
+        serving replay decides separately how much suffix to re-publish."""
+        with self._lock:
+            assert not self._chunk_log and self._serving is None, \
+                "restore_state requires a fresh warehouse"
+            chunks = [np.asarray(c, np.float32) for c in state["chunks"]]
+            if len(chunks) != int(state["seq"]):
+                raise IOError(
+                    f"warehouse restore: {len(chunks)} chunks for commit "
+                    f"seq {state['seq']}")
+            self._chunk_log = chunks
+            self.commit_seq = int(state["seq"])
+            self.rows_loaded = int(state["rows"])
+            self.load_calls = int(state["load_calls"])
+            self._kpi_running = (None if state["kpi_running"] is None
+                                 else np.asarray(state["kpi_running"]))
+            self._kpi_gap_rows = int(state["kpi_gap_rows"])
 
     def _commit(self, block: np.ndarray,
                 event_times: Optional[np.ndarray],

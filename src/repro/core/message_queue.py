@@ -149,22 +149,29 @@ class Topic:
             else:
                 self._untracked_key_load += len(ks)
         if self.cfg.compacted:
-            # within-batch winner per row key first (latest txn_time, arrival
-            # order breaking ties — same rule as the per-record loop), then
-            # one dict update per surviving key
-            order = np.lexsort((np.arange(len(batch)), batch.txn_time,
-                                batch.row_key))
-            rks = batch.row_key[order]
-            last = np.nonzero(np.append(rks[1:] != rks[:-1], True))[0]
-            for i in order[last]:
-                i = int(i)
-                rk = int(batch.row_key[i])
-                t = int(batch.txn_time[i])
-                prev = self._compact.get(rk)
-                if prev is None or t >= prev[0]:
-                    self._compact[rk] = (t, batch.payload[i],
-                                         int(batch.business_key[i]))
-            self._compact_view = None
+            self._compact_update(batch)
+
+    def _compact_update(self, batch: RecordBatch) -> None:
+        """Lock-held: fold one batch into the compaction index — within-
+        batch winner per row key first (latest txn_time, arrival order
+        breaking ties — same rule as the per-record loop), then one dict
+        update per surviving key. Also the recovery path's replay step:
+        last-writer-wins is associative over concatenation, so replaying
+        journal segments in partition-log order rebuilds the index the
+        original publishes built."""
+        order = np.lexsort((np.arange(len(batch)), batch.txn_time,
+                            batch.row_key))
+        rks = batch.row_key[order]
+        last = np.nonzero(np.append(rks[1:] != rks[:-1], True))[0]
+        for i in order[last]:
+            i = int(i)
+            rk = int(batch.row_key[i])
+            t = int(batch.txn_time[i])
+            prev = self._compact.get(rk)
+            if prev is None or t >= prev[0]:
+                self._compact[rk] = (t, batch.payload[i],
+                                     int(batch.business_key[i]))
+        self._compact_view = None
 
     def _compact_columns(self):
         """Columnar view of the compaction index (cached between publishes)
@@ -281,6 +288,93 @@ class Topic:
                 [self.partition_pub, np.zeros(add, np.int64)])
             self.cfg.n_partitions = n_partitions
 
+    # ------------------------------------------------------------- durability
+    def export_state(self, since: Optional[List[int]] = None
+                     ) -> Tuple[Dict, Dict[str, Dict]]:
+        """(meta, segments): everything the durability journal needs for
+        this topic. ``segments`` holds the partition-log SUFFIXES past
+        ``since`` (already-journaled lengths, per partition) as column
+        dicts; ``meta`` holds the small full state — lengths, routing
+        epoch + live history horizons, publish/key-load counters."""
+        with self._lock:
+            lengths = [p.length for p in self.partitions]
+            marks = list(since or [])
+            segments: Dict[str, Dict] = {}
+            for p, part in enumerate(self.partitions):
+                lo = marks[p] if p < len(marks) else 0
+                if part.length > lo:
+                    segments[str(p)] = part.read(lo).as_dict()
+            meta = {
+                "lengths": lengths,
+                "n_partitions": int(self.cfg.n_partitions),
+                "routing": routing_state(self.routing),
+                "history": [{"table": routing_state(t),
+                             "horizons": [int(h) for h in hz]}
+                            for t, hz in self._history],
+                "partition_pub": self.partition_pub.copy(),
+                "key_loads": self._key_loads.copy(),
+                "untracked": int(self._untracked_key_load),
+            }
+        return meta, segments
+
+    def restore_state(self, meta: Dict,
+                      segments: Dict[int, List[Dict]]) -> None:
+        """Cold-restart restore: wipe and rebuild the partition logs from
+        journal segments (appended DIRECTLY to their recorded partitions
+        — never re-routed, since the records were routed by whatever
+        epoch ruled at publish time), the compaction index by replaying
+        the restored batches, and the routing/counter state verbatim.
+
+        A partition's value may be a LIST of column dicts (the journal's
+        accumulated across-step form) or a single column dict (the shape
+        ``export_state`` emits — a direct export->restore round trip,
+        e.g. broker migration without a journal in between)."""
+        with self._lock:
+            n = max(int(meta["n_partitions"]), len(self.partitions))
+            self.cfg.n_partitions = n
+            self.partitions = [Partition() for _ in range(n)]
+            self._compact = {}
+            self._compact_view = None
+            for p, col_list in segments.items():
+                if isinstance(col_list, dict):
+                    col_list = [col_list]
+                for cols in col_list:
+                    batch = RecordBatch(
+                        **{k: np.asarray(v) for k, v in cols.items()})
+                    self.partitions[int(p)].append(batch)
+                    if self.cfg.compacted:
+                        self._compact_update(batch)
+            self.routing = restore_routing(meta["routing"])
+            self._history = tuple(
+                (restore_routing(h["table"]), tuple(h["horizons"]))
+                for h in meta["history"])
+            pub = np.zeros(n, np.int64)
+            src = np.asarray(meta["partition_pub"], np.int64)
+            pub[:len(src)] = src
+            self.partition_pub = pub
+            self._key_loads = np.asarray(meta["key_loads"], np.int64).copy()
+            self._untracked_key_load = int(meta["untracked"])
+
+
+def routing_state(table: RoutingTable) -> Dict:
+    """JSON/array-serializable form of one routing table."""
+    out = {"epoch": int(table.epoch), "kind": table.kind,
+           "n_partitions": int(table.n_partitions)}
+    if table.kind == "points":
+        out["points"] = np.asarray(table.points)
+        out["owners"] = np.asarray(table.owners)
+    return out
+
+
+def restore_routing(state: Dict) -> RoutingTable:
+    if state["kind"] == "points":
+        return RoutingTable.from_points(
+            np.asarray(state["points"], np.uint64),
+            np.asarray(state["owners"], np.int32),
+            int(state["n_partitions"]), int(state["epoch"]))
+    return RoutingTable.static(int(state["n_partitions"]),
+                               epoch=int(state["epoch"]))
+
 
 class MessageQueue:
     """Broker: topics + consumer-group offsets (restartable consumption).
@@ -385,13 +479,55 @@ class MessageQueue:
         with self._olock:
             return self.offsets.get((group, topic, partition), 0)
 
-    def restore_offsets(self, state: Dict) -> None:
+    def restore_offsets(self, state) -> None:
+        """Accepts the dict form (keys either (group, topic, part) tuples
+        or "group|topic|part" strings) or the journal's list-of-rows form
+        ``[[group, topic, part, n], ...]``. String/row partition ids are
+        parsed back to int — a str partition key would never match the
+        int-keyed lookups every consume path performs."""
         with self._olock:
-            self.offsets.update(
-                {tuple(k.split("|")): v for k, v in state.items()}
-                if isinstance(next(iter(state), None), str) else state)
+            if isinstance(state, list):
+                for g, t, p, n in state:
+                    self.offsets[(g, t, int(p))] = int(n)
+            elif state and isinstance(next(iter(state)), str):
+                for k, v in state.items():
+                    g, t, p = k.split("|")
+                    self.offsets[(g, t, int(p))] = int(v)
+            else:
+                self.offsets.update(state)
             self.positions.clear()   # read-ahead is not durable state
 
     def export_offsets(self) -> Dict:
         with self._olock:
             return dict(self.offsets)
+
+    # ------------------------------------------------------------- durability
+    def export_state(self, since: Optional[Dict[str, List[int]]] = None
+                     ) -> Dict:
+        """Broker state for the durability journal: per-topic meta (full,
+        small) + partition-log suffixes past ``since[topic]`` (large,
+        incremental) + committed offsets as rows. Read-ahead positions
+        are deliberately NOT exported — a restart abandons them and
+        resumes from the committed offsets (the same contract a worker
+        death has always had)."""
+        since = since or {}
+        meta: Dict[str, Dict] = {}
+        segments: Dict[str, Dict] = {}
+        for name, t in self.topics.items():
+            meta[name], segments[name] = t.export_state(since.get(name))
+        with self._olock:
+            offsets = [[g, tp, int(p), int(n)]
+                       for (g, tp, p), n in self.offsets.items()]
+        return {"meta": meta, "segments": segments, "offsets": offsets}
+
+    def restore_broker_state(self, state: Dict) -> None:
+        """Restore every topic's logs/routing/counters plus the committed
+        offsets. ``state["segments"]`` is the journal-accumulated form:
+        {topic: {partition: [column-dict, ...]}} in log order."""
+        for name, meta in state["meta"].items():
+            self.topics[name].restore_state(
+                meta, state["segments"].get(name, {}))
+        with self._olock:
+            self.offsets.clear()
+            self.positions.clear()
+        self.restore_offsets(state["offsets"])

@@ -26,6 +26,9 @@ from repro.core.partitioning import (PartitionAssignment, RoutingTable,
                                      get_strategy, isin_sorted, partition_of)
 from repro.core.records import RecordBatch
 from repro.core.transformer import DataTransformer
+from repro.durability.faults import (COMMIT_POST, INGEST_FETCH,
+                                     LOAD_PRE_COMMIT, NULL_INJECTOR,
+                                     REPARTITION_MID, TRANSFORM_DONE)
 
 
 @dataclasses.dataclass
@@ -128,6 +131,9 @@ class StreamProcessorWorker:
                                            n_units=cfg.n_business_keys)
         self.metrics = StageMetrics()
         self.group = f"sp.{name}"
+        # fault seams (tests): the pipeline points this at its injector;
+        # the default never trips (one dict get per seam)
+        self.fault = NULL_INJECTOR
 
     # ----------------------------------------------------------- cache mgmt
     @property
@@ -308,17 +314,26 @@ class StreamProcessorWorker:
         t0 = time.perf_counter()
         batch, counts = self.queue.consume_many(
             self.group, topic, self.partitions, max_records)
-        for p, c in counts.items():
-            self.queue.commit(self.group, topic, p, c)
+        self.fault.trip(INGEST_FETCH)
         block, merged = self.transformer.process_block(batch)
-        if block is None:
+        if block is None:                # counts is empty on this path
             self.metrics.wall_s += time.perf_counter() - t0
             return 0
+        self.fault.trip(TRANSFORM_DONE)
         block.start_host_copy()          # D2H rides behind the compute
         facts, _ = self.transformer.finish(block, merged)
         done = self.warehouse.load_partitioned(
             facts, self.cfg.n_partitions, rollup=block.rollup_host(),
             routing_epoch=self.queue.topics[topic].routing.epoch)
+        self.fault.trip(LOAD_PRE_COMMIT)
+        # commit AFTER the warehouse load (crash-consistency: a death
+        # between load and commit re-serves the records, but recovery
+        # rolls the warehouse back to its checkpoint first, so nothing
+        # double-loads; committing first would LOSE records instead —
+        # same order the concurrent runtime's load stage has always used)
+        for p, c in counts.items():
+            self.queue.commit(self.group, topic, p, c)
+        self.fault.trip(COMMIT_POST)
         self.metrics.records += done
         self.metrics.wall_s += time.perf_counter() - t0
         return done
@@ -329,10 +344,14 @@ class DODETLPipeline:
     ``repro.runtime`` schedules the same workers with failures/elasticity)."""
 
     def __init__(self, cfg: ETLConfig, source: SourceDatabase,
-                 n_workers: int = 1, join_depth: int = 1, backend=None):
+                 n_workers: int = 1, join_depth: int = 1, backend=None,
+                 fault=None):
         self.cfg = cfg
         self.source = source
         self.backend = get_backend(backend or cfg.backend or None)
+        # deterministic fault injection (tests): shared by every worker and
+        # the repartition coordinator; the default injector never trips
+        self.fault = fault or NULL_INJECTOR
         self.queue = MessageQueue()
         self.tracker = ChangeTracker(cfg, source.log, self.queue)
         self.warehouse = StarSchemaWarehouse(backend=self.backend)
@@ -357,6 +376,7 @@ class DODETLPipeline:
         w = StreamProcessorWorker(name, self.cfg, self.queue, self.warehouse,
                                   join_depth, backend=self.backend)
         w._routing_topics = self.operational_topics
+        w.fault = self.fault
         return w
 
     def _master_topics(self) -> Dict[str, str]:
@@ -510,6 +530,10 @@ class DODETLPipeline:
                 self.queue.topics[t].set_routing(new_table)
             for w in self.workers:
                 w.set_pending_tables(())
+            # mid-repartition crash seam: new epoch published, ownership
+            # not yet rebalanced — the hardest recovery window (a restart
+            # must resume with the new epoch live AND re-run the rebalance)
+            self.fault.trip(REPARTITION_MID)
             moved = cur.moved_fraction(
                 new_table, np.arange(self.cfg.n_business_keys))
         # phase 3: rebalance partition ownership, transferring offsets

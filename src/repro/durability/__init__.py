@@ -1,0 +1,22 @@
+"""Durability layer: incremental journal checkpoints of the data plane +
+exactly-once crash recovery (ROADMAP item 2; see ARCHITECTURE.md
+"Durability & recovery").
+
+Public surface:
+
+* ``FaultInjector`` / ``InjectedCrash`` — deterministic named crash
+  points at the pipeline's stage seams (``repro.durability.faults``);
+* ``DurabilityJournal`` — atomic incremental checkpoint steps built on
+  ``repro.train.checkpoint`` (``repro.durability.journal``);
+* ``RecoveryCoordinator`` / ``recover_pipeline`` — consistent capture at
+  commit boundaries and full cold-restart restore
+  (``repro.durability.recovery``).
+"""
+from repro.durability.faults import (CRASH_POINTS, FaultInjector,
+                                     InjectedCrash, NULL_INJECTOR)
+from repro.durability.journal import DurabilityJournal
+from repro.durability.recovery import RecoveryCoordinator, recover_pipeline
+
+__all__ = ["CRASH_POINTS", "FaultInjector", "InjectedCrash",
+           "NULL_INJECTOR", "DurabilityJournal", "RecoveryCoordinator",
+           "recover_pipeline"]

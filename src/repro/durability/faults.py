@@ -1,0 +1,107 @@
+"""Deterministic fault injection at the pipeline's stage seams.
+
+A ``FaultInjector`` is armed with a schedule ``{point: ordinal}``: the
+ordinal-th time execution reaches the named crash point, the process
+"dies" — either by raising ``InjectedCrash`` (in-process drills: the
+test abandons the pipeline objects, exactly as a kill would, and
+recovers into fresh ones) or by ``SIGKILL``-ing the whole process
+(cross-process kill-9 drills: the parent recovers from the journal).
+
+Crash points are *seams*, not random preemption: each one sits at a
+stage boundary where in-flight state differs (fetched-uncommitted,
+transformed-unloaded, loaded-uncommitted, checkpoint written-unrenamed,
+repartition half-applied). Recovery must be exactly-once from every one
+of them — that is what ``tests/test_recovery.py`` drills.
+
+The default injector (``NULL_INJECTOR``) never trips; ``trip`` on it is
+one dict lookup, so production paths pay nothing measurable.
+"""
+from __future__ import annotations
+
+import os
+import signal
+import threading
+from typing import Dict, Optional
+
+# canonical crash-point names (the seams wired through pipeline/cluster)
+INGEST_FETCH = "ingest.fetch"            # records fetched, nothing committed
+TRANSFORM_DONE = "transform.done"        # facts computed, nothing loaded
+LOAD_PRE_COMMIT = "load.pre_commit"      # warehouse loaded, offsets NOT committed
+COMMIT_POST = "commit.post"              # offsets committed (post-boundary)
+CHECKPOINT_MID_WRITE = "checkpoint.mid_write"  # journal tmp written, not renamed
+REPARTITION_MID = "repartition.mid"      # epoch switched, ownership not rebalanced
+
+CRASH_POINTS = (INGEST_FETCH, TRANSFORM_DONE, LOAD_PRE_COMMIT, COMMIT_POST,
+                CHECKPOINT_MID_WRITE, REPARTITION_MID)
+
+
+class InjectedCrash(BaseException):
+    """Raised at a tripped crash point. Derives from BaseException so an
+    over-broad ``except Exception`` in a stage loop cannot swallow the
+    simulated death and keep processing."""
+
+    def __init__(self, point: str, hit: int):
+        super().__init__(f"injected crash at {point} (hit #{hit})")
+        self.point = point
+        self.hit = hit
+
+
+class FaultInjector:
+    """Named crash points with per-point Nth-hit ordinals.
+
+    ``schedule`` maps point name -> ordinal (1-based): the ordinal-th
+    ``trip(point)`` call crashes; earlier and later hits pass through.
+    ``mode``:
+
+    * ``"raise"``   — raise ``InjectedCrash`` in the tripping thread
+      (other stage threads keep running until the drill abandons them —
+      the in-process analogue of a kill);
+    * ``"sigkill"`` — ``os.kill(os.getpid(), SIGKILL)``: the real thing,
+      for cross-process drills (benchmarks/recovery_bench.py --kill9).
+
+    Hit counting is lock-protected so concurrent stage threads tripping
+    the same point resolve to exactly one ordinal each; ``tripped`` is a
+    ``threading.Event`` drills wait on before abandoning the cluster.
+    """
+
+    def __init__(self, schedule: Optional[Dict[str, int]] = None,
+                 mode: str = "raise"):
+        assert mode in ("raise", "sigkill"), mode
+        self.schedule = dict(schedule or {})
+        self.mode = mode
+        self.counts: Dict[str, int] = {}
+        self.tripped = threading.Event()
+        self.tripped_at: Optional[str] = None
+        self._lock = threading.Lock()
+
+    def trip(self, point: str) -> None:
+        """Crash if ``point``'s scheduled ordinal is reached; no-op
+        otherwise (and always a no-op once something has tripped — the
+        process is already 'dead', surviving threads must not re-die
+        into cascading exceptions mid-teardown)."""
+        target = self.schedule.get(point)
+        if target is None:
+            return
+        with self._lock:
+            if self.tripped.is_set():
+                return
+            hit = self.counts.get(point, 0) + 1
+            self.counts[point] = hit
+            if hit != target:
+                return
+            self.tripped_at = point
+            self.tripped.set()
+        if self.mode == "sigkill":
+            os.kill(os.getpid(), signal.SIGKILL)
+        raise InjectedCrash(point, hit)
+
+
+class _NullInjector(FaultInjector):
+    """The default: never trips. ``trip`` short-circuits on the empty
+    schedule, so hot paths carry one dict ``get`` per seam."""
+
+    def __init__(self):
+        super().__init__({}, "raise")
+
+
+NULL_INJECTOR = _NullInjector()

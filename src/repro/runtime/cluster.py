@@ -42,6 +42,9 @@ from repro.core.cdc import ChangeLog, SourceDatabase
 from repro.core.metrics import LatencyRecorder, percentiles_ms
 from repro.core.pipeline import DODETLPipeline, StreamProcessorWorker
 from repro.core.records import RecordBatch
+from repro.durability.faults import (COMMIT_POST, INGEST_FETCH,
+                                     LOAD_PRE_COMMIT, REPARTITION_MID,
+                                     TRANSFORM_DONE, InjectedCrash)
 
 
 @dataclasses.dataclass
@@ -321,6 +324,15 @@ class WorkerRuntime:
                 - in_flight - self.retry_inflight)
 
     def _ingest_loop(self) -> None:
+        # InjectedCrash (a BaseException) kills just this stage thread —
+        # the in-process analogue of the node dying mid-stage; the drill
+        # waits on fault.tripped and abandons the cluster
+        try:
+            self._ingest_body()
+        except InjectedCrash:
+            return
+
+    def _ingest_body(self) -> None:
         pipe, w = self.pipe, self.worker
         while not self.stop.is_set():
             self._apply_control()
@@ -344,6 +356,7 @@ class WorkerRuntime:
                 batch, counts = w.fetch_operational(topic, cap)
                 if counts:
                     self.records_fetched += len(batch)
+                    pipe.fault.trip(INGEST_FETCH)   # fetched, uncommitted
                     self.fetched += 1
                     if not self._put(self.transform_q,
                                      _Work(topic, batch, counts)):
@@ -355,6 +368,12 @@ class WorkerRuntime:
 
     # -------------------------------------------------------- stage: transform
     def _transform_loop(self) -> None:
+        try:
+            self._transform_body()
+        except InjectedCrash:
+            return
+
+    def _transform_body(self) -> None:
         device = self.worker.backend.device
         while True:
             item = self._get(self.transform_q)
@@ -374,6 +393,7 @@ class WorkerRuntime:
             # copy enqueued asynchronously behind the compute
             block = self.worker.transformer.transform_block(
                 item.batch, eq, qu).start_host_copy()
+            self.pipe.fault.trip(TRANSFORM_DONE)   # transformed, unloaded
             if not self._put(self.load_q,
                              _Transformed(item.topic, item.batch, item.counts,
                                           block)):
@@ -427,6 +447,12 @@ class WorkerRuntime:
             self.retry_inflight = 0
 
     def _load_loop(self) -> None:
+        try:
+            self._load_body()
+        except InjectedCrash:
+            return
+
+    def _load_body(self) -> None:
         while True:
             item = self._get(self.load_q)
             if item is None:
@@ -437,9 +463,14 @@ class WorkerRuntime:
             with self.commit_lock:
                 if not self.dead:
                     self._load_and_record(item.batch, item.block)
+                    # loaded, offsets NOT committed — the window where a
+                    # crash leaves at-least-once exposure that recovery's
+                    # warehouse rollback turns back into exactly-once
+                    self.pipe.fault.trip(LOAD_PRE_COMMIT)
                     for p, c in item.counts.items():
                         self.worker.queue.commit(self.worker.group,
                                                  item.topic, p, c)
+                    self.pipe.fault.trip(COMMIT_POST)
                 # retire AFTER the lates are buffered: between push and
                 # retirement the records are double-counted (buffer AND
                 # in-flight), which errs on the safe side of headroom
@@ -472,10 +503,18 @@ class ConcurrentCluster:
 
     def __init__(self, pipe: DODETLPipeline, *,
                  max_records_per_partition: Optional[int] = None,
-                 poll_cdc: bool = True, serving=None):
+                 poll_cdc: bool = True, serving=None,
+                 recovery=None, checkpoint_every_s: Optional[float] = None):
         self.pipe = pipe
         self.cap = max_records_per_partition
         self.poll_cdc = poll_cdc
+        # durability: a RecoveryCoordinator makes `checkpoint()` journal
+        # consistent snapshots; `checkpoint_every_s` adds a periodic
+        # checkpointer thread alongside the stage threads
+        self.recovery = recovery
+        self.checkpoint_every_s = checkpoint_every_s
+        self._ckpt_thread: Optional[threading.Thread] = None
+        self._stop_ckpt = threading.Event()
         # optional BI serving stage: a MaterializedViewEngine (or a
         # ReportServer / BatchedReportServer wrapping one) whose
         # maintenance thread runs with the cluster; worker load stages
@@ -511,6 +550,31 @@ class ConcurrentCluster:
             self._extract_thread = threading.Thread(
                 target=self._extract_loop, daemon=True, name="cdc.extract")
             self._extract_thread.start()
+        if self.recovery is not None and self.checkpoint_every_s:
+            self._ckpt_thread = threading.Thread(
+                target=self._ckpt_loop, daemon=True, name="durability.ckpt")
+            self._ckpt_thread.start()
+
+    def _ckpt_loop(self) -> None:
+        while not self._stop_ckpt.wait(self.checkpoint_every_s):
+            try:
+                self.checkpoint()
+            except InjectedCrash:
+                return               # checkpoint-write crash drill
+
+    def checkpoint(self) -> Optional[int]:
+        """Journal one consistent snapshot of the whole data plane (see
+        ``RecoveryCoordinator.capture``). The live workers' commit locks
+        are passed in name order — a fixed acquisition order, so a
+        concurrent rebalance (which takes one lock at a time) can never
+        deadlock against a capture. No-op once a fault has tripped: a
+        dead process journals nothing on the way down."""
+        if self.recovery is None or self.pipe.fault.tripped.is_set():
+            return None
+        locks = [rt.commit_lock for _, rt in sorted(self.runtimes.items())
+                 if not rt.dead]
+        return self.recovery.checkpoint(self.pipe, engine=self.serving,
+                                        extra_locks=locks)
 
     def _extract_loop(self) -> None:
         tracker = self.pipe.tracker
@@ -521,17 +585,48 @@ class ConcurrentCluster:
 
     def stop_all(self) -> None:
         self._stop_extract.set()
+        self._stop_ckpt.set()
         for rt in self.runtimes.values():
             rt.stop.set()
         if self._extract_thread is not None:
             self._extract_thread.join(5.0)
             self._extract_thread = None
+        if self._ckpt_thread is not None:
+            self._ckpt_thread.join(5.0)
+            self._ckpt_thread = None
         for rt in self.runtimes.values():
             rt.join()
         if self.serving_front is not None:
             self.serving_front.stop()    # drains admitted queries first
         if self.serving is not None:
             self.serving.stop()          # folds the remaining delta backlog
+
+    def abandon(self) -> None:
+        """Crash-drill teardown: stop every thread WITHOUT the graceful
+        drain ``stop_all`` performs — no queued hand-off is loaded, no
+        offset committed, no delta backlog folded, no checkpoint written.
+        What a kill -9 leaves behind, minus the process exit: the journal
+        and broker/warehouse objects are simply abandoned, and recovery
+        starts from fresh objects + the journal (tests assert the result
+        matches an uninterrupted run byte-for-byte)."""
+        self._stop_extract.set()
+        self._stop_ckpt.set()
+        for rt in self.runtimes.values():
+            with rt.commit_lock:     # atomic vs an in-progress load+commit
+                rt.dead = True       # load stage loads/commits nothing more
+            rt.stop.set()
+        if self._extract_thread is not None:
+            self._extract_thread.join(5.0)
+            self._extract_thread = None
+        if self._ckpt_thread is not None:
+            self._ckpt_thread.join(5.0)
+            self._ckpt_thread = None
+        for rt in self.runtimes.values():
+            rt.join()
+        if self.serving_front is not None:
+            self.serving_front.stop()
+        if self.serving is not None:
+            self.serving.abort()         # stop folding, KEEP the backlog
 
     # ---------------------------------------------------------------- metrics
     def alive_workers(self) -> List[str]:
@@ -900,6 +995,10 @@ class ConcurrentCluster:
         stats = CacheMigrationStats()
         if new_table.epoch != cur.epoch:
             stats = self._reroute_all(new_table)
+            # mid-repartition crash seam: publishers already route by the
+            # new epoch, ownership not yet rebalanced (same window the
+            # sequential coordinator exposes)
+            pipe.fault.trip(REPARTITION_MID)
         # load-aware ownership rebalance: undrained backlog (old-epoch
         # placement) + expected future arrivals under the new epoch
         weights = pipe.backlog_weights()

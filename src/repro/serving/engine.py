@@ -369,6 +369,16 @@ class MaterializedViewEngine:
             self._thread = None
         self.fold_pending()
 
+    def abort(self) -> None:
+        """Crash-drill teardown: stop maintenance WITHOUT folding the
+        pending backlog — a killed process folds nothing on the way
+        down. The abandoned engine's front stays wherever the last
+        completed fold left it."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(5.0)
+            self._thread = None
+
     def report(self) -> Dict[str, float]:
         snap = self._front
         out = {"epoch": snap.epoch, "views": len(self.specs),
@@ -380,6 +390,49 @@ class MaterializedViewEngine:
         out.update({f"staleness_{k}": v
                     for k, v in self.staleness().items()})
         return out
+
+    # -------------------------------------------------------------- durability
+    def export_fold_state(self) -> Dict:
+        """Checkpoint capture of the published front: per-view aggregate
+        tables + fold counters. Lock-free — ``_front`` is an immutable
+        snapshot, and the capture protocol guarantees the front's
+        ``deltas_folded`` never exceeds the warehouse commit seq captured
+        in the same checkpoint (folds only consume published commits)."""
+        front = self._front
+        return {
+            "tables": {name: np.asarray(st.table)
+                       for name, st in front.states.items()},
+            "epoch": int(front.epoch),
+            "rows_folded": int(front.rows_folded),
+            "deltas_folded": int(front.deltas_folded),
+            "watermark_event_time": float(front.watermark_event_time),
+        }
+
+    def restore_fold_state(self, state: Dict) -> None:
+        """Cold-restart restore, before ``attach_serving``/``start``: the
+        front becomes the checkpointed epoch and the delta sequence
+        resumes at ``deltas_folded`` — the warehouse then replays only
+        the chunk-log suffix past it. The restored watermark is a
+        previous process's monotonic clock only when event times were
+        absent; folded CDC event times (the normal case) carry over
+        exactly."""
+        states = {}
+        for spec in self.specs:
+            t = np.ascontiguousarray(np.asarray(state["tables"][spec.name]))
+            t.flags.writeable = False
+            states[spec.name] = ViewState(spec, t)
+        with self._fold_lock:
+            with self._q_lock:
+                assert not self._pending and self._front.deltas_folded == 0, \
+                    "restore_fold_state requires a fresh engine"
+                self._front = EpochSnapshot(
+                    epoch=int(state["epoch"]), states=states,
+                    published_at=serving_clock(),
+                    watermark_event_time=float(
+                        state["watermark_event_time"]),
+                    rows_folded=int(state["rows_folded"]),
+                    deltas_folded=int(state["deltas_folded"]))
+                self._seq = int(state["deltas_folded"])
 
     # ------------------------------------------------------------------ oracle
     @classmethod

@@ -17,13 +17,19 @@ from __future__ import annotations
 import hashlib
 import json
 import os
+import re
 import shutil
 import threading
 import time
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+# strict step-dir name: a crash mid-save leaves `step_N.tmp-<pid>-<ns>`
+# siblings behind, which ALSO start with "step_" — a lazy prefix match here
+# used to crash `latest_step`/`_gc` on the very restart that needed them
+_STEP_DIR = re.compile(r"^step_(\d+)$")
 
 
 def _flatten(tree) -> Tuple[list, Any]:
@@ -31,9 +37,28 @@ def _flatten(tree) -> Tuple[list, Any]:
     return leaves, treedef
 
 
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:                      # platform without dir-fd fsync
+        return
+    try:
+        os.fsync(fd)
+    except OSError:
+        pass
+    finally:
+        os.close(fd)
+
+
 def save(path: str, step: int, tree: Any,
-         extra: Optional[Dict[str, Any]] = None) -> str:
-    """Atomic checkpoint write. Returns the final directory."""
+         extra: Optional[Dict[str, Any]] = None,
+         pre_commit=None) -> str:
+    """Atomic checkpoint write. Returns the final directory.
+
+    ``pre_commit``, if given, runs after the tmp dir is fully written and
+    fsynced but BEFORE the atomic rename — the seam where a crash leaves a
+    complete-but-invisible checkpoint (the fault injector's
+    ``checkpoint.mid_write`` point)."""
     leaves, treedef = _flatten(tree)
     host_leaves = [np.asarray(x) for x in leaves]
     tmp = f"{path}.tmp-{os.getpid()}-{time.time_ns()}"
@@ -42,6 +67,8 @@ def save(path: str, step: int, tree: Any,
                 "treedef": str(treedef), "leaves": [], "extra": extra or {}}
     with open(os.path.join(tmp, "leaves.npz"), "wb") as f:
         np.savez(f, **{f"leaf_{i}": a for i, a in enumerate(host_leaves)})
+        f.flush()
+        os.fsync(f.fileno())
     for i, a in enumerate(host_leaves):
         manifest["leaves"].append({
             "i": i, "shape": list(a.shape), "dtype": str(a.dtype),
@@ -49,25 +76,50 @@ def save(path: str, step: int, tree: Any,
         })
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _fsync_dir(tmp)
+    if pre_commit is not None:
+        pre_commit()
     if os.path.exists(path):
         shutil.rmtree(path)
     os.replace(tmp, path)
+    _fsync_dir(os.path.dirname(path) or ".")
     return path
 
 
-def restore(path: str, tree_like: Any) -> Tuple[int, Any, Dict[str, Any]]:
+def restore(path: str, tree_like: Any = None, only=None
+            ) -> Tuple[int, Any, Dict[str, Any]]:
     """Validates checksums; raises on corruption. ``tree_like`` provides the
-    pytree structure (and expected shapes/dtypes)."""
+    pytree structure (and expected shapes/dtypes); when None the flat leaf
+    LIST is returned as saved — the durability journal's mode, where the
+    tree layout travels in ``extra`` instead of a live template.
+
+    ``only`` (flat-list mode only): an index set — leaves outside it are
+    returned as None without being read or validated. The journal uses
+    this to skip the dead small-state leaves of non-final steps, whose
+    per-member zip overhead would otherwise dominate recovery."""
+    assert only is None or tree_like is None, \
+        "partial restore is a flat-list-mode feature"
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "leaves.npz"))
+    wanted = None if only is None else set(only)
     leaves = []
     for rec in manifest["leaves"]:
+        if wanted is not None and rec["i"] not in wanted:
+            leaves.append(None)
+            continue
         a = data[f"leaf_{rec['i']}"]
         digest = hashlib.sha256(a.tobytes()).hexdigest()[:16]
         if digest != rec["sha256"]:
             raise IOError(f"checkpoint leaf {rec['i']} checksum mismatch")
         leaves.append(a)
+    if len(leaves) != manifest["n_leaves"]:
+        raise IOError(f"checkpoint has {len(leaves)} leaves, manifest "
+                      f"says {manifest['n_leaves']}")
+    if tree_like is None:
+        return manifest["step"], leaves, manifest.get("extra", {})
     ref_leaves, treedef = _flatten(tree_like)
     if len(ref_leaves) != len(leaves):
         raise IOError(f"checkpoint has {len(leaves)} leaves, "
@@ -76,15 +128,35 @@ def restore(path: str, tree_like: Any) -> Tuple[int, Any, Dict[str, Any]]:
     return manifest["step"], restored, manifest.get("extra", {})
 
 
-def latest_step(root: str) -> Optional[int]:
+def step_numbers(root: str) -> List[int]:
+    """Sorted step numbers of every complete (renamed-into-place) step dir
+    under ``root``; tmp leftovers and stray files are ignored."""
     if not os.path.isdir(root):
-        return None
+        return []
     steps = []
     for d in os.listdir(root):
-        if d.startswith("step_") and os.path.exists(
-                os.path.join(root, d, "manifest.json")):
-            steps.append(int(d.split("_")[1]))
-    return max(steps) if steps else None
+        m = _STEP_DIR.match(d)
+        if m and os.path.exists(os.path.join(root, d, "manifest.json")):
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def sweep_tmp(root: str) -> int:
+    """Remove crash leftovers: `*.tmp-*` dirs from saves that never reached
+    their rename. Returns the number removed."""
+    if not os.path.isdir(root):
+        return 0
+    n = 0
+    for d in os.listdir(root):
+        if ".tmp-" in d:
+            shutil.rmtree(os.path.join(root, d), ignore_errors=True)
+            n += 1
+    return n
+
+
+def latest_step(root: str) -> Optional[int]:
+    steps = step_numbers(root)
+    return steps[-1] if steps else None
 
 
 class CheckpointManager:
@@ -122,17 +194,19 @@ class CheckpointManager:
             self._thread.join()
             self._thread = None
 
-    def restore_latest(self, tree_like: Any
+    def restore_latest(self, tree_like: Any = None
                        ) -> Optional[Tuple[int, Any, Dict[str, Any]]]:
+        """Restore the newest valid checkpoint, falling back past torn or
+        corrupt ones (truncated leaves, checksum mismatches) to the newest
+        step that verifies. Returns None when nothing restorable exists."""
         self.wait()
-        step = latest_step(self.root)
-        if step is None:
-            return None
-        return restore(self.dir_for(step), tree_like)
+        for step in reversed(step_numbers(self.root)):
+            try:
+                return restore(self.dir_for(step), tree_like)
+            except Exception:        # torn/corrupt (truncated npz raises
+                continue             # BadZipFile): try the previous step
+        return None
 
     def _gc(self) -> None:
-        steps = sorted(s for s in (
-            int(d.split("_")[1]) for d in os.listdir(self.root)
-            if d.startswith("step_")))
-        for s in steps[:-self.keep_last]:
+        for s in step_numbers(self.root)[:-self.keep_last]:
             shutil.rmtree(self.dir_for(s), ignore_errors=True)
