@@ -78,6 +78,13 @@ GATES: Dict[str, List[Tuple[str, str]]] = {
         ("overhead.checkpoint_overhead_ratio", "lower"),
         ("scaling.recovery_speedup_vs_cold", "higher"),
     ],
+    "BENCH_observability_smoke.json": [
+        ("gates.complete", "bool"),
+        ("gates.trace_valid", "bool"),
+        ("gates.null_overhead_ok", "bool"),
+        ("gates.overhead_enabled_ok", "bool"),
+        ("gates.throughput_ratio_traced_vs_null", "higher"),
+    ],
 }
 
 

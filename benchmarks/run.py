@@ -70,6 +70,12 @@ def main() -> None:
     from benchmarks import recovery_bench as RB
     emit("recovery", RB.summary(quick=args.quick))
 
+    # observability plane: NULL_TRACER seam cost + enabled tracer/registry
+    # overhead as paired throughput ratios (full sweep:
+    # python -m benchmarks.observability_overhead -> BENCH_observability.json)
+    from benchmarks import observability_overhead as OO
+    emit("observability", OO.summary(quick=args.quick))
+
     # roofline summary (if the dry-run matrix has been produced)
     try:
         from benchmarks.roofline import load_cells, roofline_fraction

@@ -80,6 +80,32 @@ def main():
           f"p50/p95 = {sv['staleness_p50_ms']:.0f}/"
           f"{sv['staleness_p95_ms']:.0f} ms")
 
+    # ---- one health() call: the unified observability plane. Per-worker
+    # load, stage-queue depths, commit lag, freshness/staleness
+    # percentiles and the merged counter registry, collected lock-free at
+    # one instant — the observation vector an autoscaling controller (or
+    # a wallboard) polls while the data plane keeps streaming.
+    hp = cluster.health()
+    busiest, bw = max(hp["workers"].items(),
+                      key=lambda kv: kv[1]["records_done"])
+    lag = hp["backlog"]
+    c = hp["counters"]
+    published = sum(v for k, v in c.items()
+                    if k.startswith("broker.") and k.endswith(".published"))
+    print(f"health @ {hp['wall_s']:.1f}s: backlog "
+          f"{lag['operational_lag']} uncommitted + {lag['buffered']} "
+          f"late-buffered; routing epoch {hp['routing_epoch']}; serving "
+          f"epoch {hp['serving']['epoch']} "
+          f"({hp['serving']['pending_deltas']} deltas pending)")
+    print(f"  busiest worker {busiest}: {bw['records_done']} done @ "
+          f"{bw['throughput_rps']:,.0f} rps, queues t/l "
+          f"{bw['transform_q']}/{bw['load_q']}, "
+          f"{bw['cache_rows']} cached master rows, partitions "
+          f"{bw['partitions'][:4]}{'...' if len(bw['partitions']) > 4 else ''}")
+    print(f"  counters: {published} broker msgs, cache hit/miss "
+          f"{c.get('worker.cache_hits', 0)}/"
+          f"{c.get('worker.cache_misses', 0)}")
+
     # ---- §4.1.3 failure drill: two workers die mid-shift, under load
     redump = cluster.fail_workers(["w1", "w3"])
     print(f"2/5 workers failed; partitions reassigned incrementally, "

@@ -71,16 +71,23 @@ dispatch-overhead benchmark and the tier-1 dispatch-count tests read them.
 """
 from __future__ import annotations
 
+import itertools
 import os
 from typing import Dict, Optional, Tuple, Type, Union
 
 import numpy as np
 
 from repro.core.records import PAYLOAD_WIDTH
+from repro.observability.registry import global_registry
 
 EPS = 1e-6
 DEFAULT_BACKEND = "jax"
 ENV_VAR = "DODETL_BACKEND"
+
+# backends are process singletons (get_backend) but tests construct ad-hoc
+# instances too; each instance gets its own registry shard so resets stay
+# per-instance while the merged read path sums per-backend process totals
+_BACKEND_SEQ = itertools.count()
 
 # fact layout produced by every backend's ``transform`` (keep in sync with
 # repro.core.transformer.FACT_COLUMNS)
@@ -449,10 +456,39 @@ class ComputeBackend:
     device: bool = False     # True: wants the cache's device-mirrored state
 
     def __init__(self):
-        # advisory instrumentation (single-threaded use: the dispatch
-        # benchmark + tier-1 dispatch-count tests); see reset_stats()
-        self.op_dispatches = 0   # device dispatch groups issued
-        self.host_syncs = 0      # blocking device->host materializations
+        # dispatch instrumentation lives on the process-wide metrics
+        # registry (one read path with every other pipeline signal), one
+        # shard per backend INSTANCE so per-instance counts/resets — the
+        # contract the dispatch-count tests pin — are unchanged; the
+        # registry merge sums instances into per-backend process totals
+        # (``backend.<name>.op_dispatches``). The ``op_dispatches`` /
+        # ``host_syncs`` properties keep the historical int-attribute
+        # surface byte-for-byte.
+        shard = global_registry().shard(
+            f"backend.{self.name}#{next(_BACKEND_SEQ)}")
+        self.metrics = shard
+        self._op_dispatches = shard.counter(
+            f"backend.{self.name}.op_dispatches")
+        self._host_syncs = shard.counter(f"backend.{self.name}.host_syncs")
+
+    @property
+    def op_dispatches(self) -> int:
+        """Device dispatch groups issued (single-threaded use: the
+        dispatch benchmark + tier-1 dispatch-count tests)."""
+        return self._op_dispatches.value
+
+    @op_dispatches.setter
+    def op_dispatches(self, v: int) -> None:
+        self._op_dispatches.value = v
+
+    @property
+    def host_syncs(self) -> int:
+        """Blocking device->host materializations."""
+        return self._host_syncs.value
+
+    @host_syncs.setter
+    def host_syncs(self, v: int) -> None:
+        self._host_syncs.value = v
 
     def reset_stats(self) -> None:
         self.op_dispatches = 0

@@ -22,7 +22,7 @@ initialization overhead.
 """
 from __future__ import annotations
 
-from typing import Optional, Set, Tuple
+from typing import Dict, Optional, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -248,6 +248,17 @@ class InMemoryTable:
         self.upsert(row_keys, payloads, txn_times)
         self.init_dump_s = time.perf_counter() - t0
         return self.init_dump_s
+
+    # ------------------------------------------------------------ metrics
+    def stats(self) -> Dict[str, float]:
+        """Health-snapshot view of the table: occupancy, mutation version,
+        watermark and the last re-dump cost. Lock-free — every field is
+        one GIL-atomic read."""
+        return {"rows": self.n_rows, "slots": self.n_slots,
+                "fill": round(self.n_rows / self.n_slots, 4)
+                if self.n_slots else 0.0,
+                "version": self.version, "watermark": self.watermark,
+                "init_dump_s": round(self.init_dump_s, 6)}
 
     # ------------------------------------------------------------ lookups
     def device_state(self) -> Tuple[jax.Array, jax.Array, jax.Array]:

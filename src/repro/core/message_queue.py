@@ -38,6 +38,7 @@ import numpy as np
 
 from repro.core.partitioning import RoutingTable
 from repro.core.records import RecordBatch
+from repro.observability.registry import (MetricsRegistry, MetricsShard)
 
 
 @dataclasses.dataclass
@@ -102,8 +103,21 @@ class Topic:
     ``horizons``), at which point ``retire_epochs`` drops it and workers
     may release the key ranges only that epoch routed to them."""
 
-    def __init__(self, cfg: TopicConfig):
+    def __init__(self, cfg: TopicConfig,
+                 metrics_shard: Optional[MetricsShard] = None):
         self.cfg = cfg
+        # broker publish counters live on the metrics registry (one read
+        # path with every other pipeline signal); the shard is this
+        # topic's private write surface — increments happen under the
+        # publish lock, which already serializes the only writer
+        self.metrics = metrics_shard or MetricsShard(f"broker.{cfg.name}")
+        self._pub_counter = self.metrics.counter(
+            f"broker.{cfg.name}.published")
+        self._key_load_counter = self.metrics.counter(
+            f"broker.{cfg.name}.key_loads")
+        self.metrics.gauge_fn(
+            f"broker.{cfg.name}.high_watermark",
+            lambda: sum(p.length for p in self.partitions))
         self.partitions = [Partition() for _ in range(cfg.n_partitions)]
         # compaction index: row_key -> (txn_time, payload, business_key)
         self._compact: Dict[int, Tuple[int, np.ndarray, int]] = {}
@@ -137,7 +151,9 @@ class Topic:
                 self.cfg.n_partitions, key=key, router=self.routing):
             self.partitions[p].append(part_batch)
             self.partition_pub[p] += len(part_batch)
+        self._pub_counter.inc(len(batch))
         if key == "business_key" and len(batch):
+            self._key_load_counter.inc(len(batch))
             ks = batch.business_key
             lo, hi = int(ks.min()), int(ks.max())
             if lo >= 0 and hi < (1 << 20):
@@ -384,14 +400,18 @@ class MessageQueue:
     before the work is done). The gap between the two is a consumer's
     in-flight window — abandoned wholesale if the consumer dies."""
 
-    def __init__(self):
+    def __init__(self, metrics: Optional[MetricsRegistry] = None):
         self.topics: Dict[str, Topic] = {}
         self.offsets: Dict[Tuple[str, str, int], int] = {}  # (group, topic, part)
         self.positions: Dict[Tuple[str, str, int], int] = {}
         self._olock = threading.RLock()
+        # per-topic publish counters land on this registry — the pipeline
+        # passes its own so broker signals share its one read path
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
 
     def create_topic(self, cfg: TopicConfig) -> Topic:
-        self.topics[cfg.name] = Topic(cfg)
+        self.topics[cfg.name] = Topic(
+            cfg, self.metrics.shard(f"broker.{cfg.name}"))
         return self.topics[cfg.name]
 
     def publish(self, topic: str, batch: RecordBatch) -> None:
@@ -478,6 +498,21 @@ class MessageQueue:
     def committed(self, group: str, topic: str, partition: int) -> int:
         with self._olock:
             return self.offsets.get((group, topic, partition), 0)
+
+    def commit_lags(self, group: str) -> Dict[str, Dict[int, int]]:
+        """Per topic -> partition: high watermark minus ``group``'s
+        committed offset — the health snapshot's backlog read path. One
+        offset-lock pass per topic; partition lengths are published
+        monotonically, so each entry is exact at its own read instant
+        and never torn."""
+        out: Dict[str, Dict[int, int]] = {}
+        for name, t in self.topics.items():
+            with self._olock:
+                out[name] = {
+                    p: t.partitions[p].length
+                    - self.offsets.get((group, name, p), 0)
+                    for p in range(len(t.partitions))}
+        return out
 
     def restore_offsets(self, state) -> None:
         """Accepts the dict form (keys either (group, topic, part) tuples

@@ -29,6 +29,9 @@ from repro.core.transformer import DataTransformer
 from repro.durability.faults import (COMMIT_POST, INGEST_FETCH,
                                      LOAD_PRE_COMMIT, NULL_INJECTOR,
                                      REPARTITION_MID, TRANSFORM_DONE)
+from repro.observability.health import build_pipeline_health
+from repro.observability.registry import MetricsRegistry, MetricsShard
+from repro.observability.tracer import NULL_TRACER
 
 
 @dataclasses.dataclass
@@ -134,6 +137,25 @@ class StreamProcessorWorker:
         # fault seams (tests): the pipeline points this at its injector;
         # the default never trips (one dict get per seam)
         self.fault = NULL_INJECTOR
+        # observability seams, same pattern: the pipeline swaps in its
+        # tracer/registry shard; the defaults are free-standing no-ops
+        self.tracer = NULL_TRACER
+        self.mshard: MetricsShard = MetricsShard(name)
+        self._bind_instruments()
+
+    def attach_metrics(self, shard: MetricsShard) -> None:
+        """Point this worker's instruments at the pipeline registry's
+        shard (one read path for cluster-wide totals)."""
+        self.mshard = shard
+        self._bind_instruments()
+
+    def _bind_instruments(self) -> None:
+        shard = self.mshard
+        self._c_hits = shard.counter("worker.cache_hits")
+        self._c_misses = shard.counter("worker.cache_misses")
+        shard.gauge_fn("buffer_occupancy", lambda: len(self.buffer))
+        shard.gauge_fn("cache_rows",
+                       lambda: self.equipment.n_rows + self.quality.n_rows)
 
     # ----------------------------------------------------------- cache mgmt
     @property
@@ -312,28 +334,42 @@ class StreamProcessorWorker:
         still bounds each partition's read so offset/rebalance semantics
         are unchanged."""
         t0 = time.perf_counter()
-        batch, counts = self.queue.consume_many(
-            self.group, topic, self.partitions, max_records)
+        with self.tracer.span("ingest.fetch") as sp:
+            batch, counts = self.queue.consume_many(
+                self.group, topic, self.partitions, max_records)
+            if not len(batch):
+                sp.drop()                # keep idle polls out of the trace
         self.fault.trip(INGEST_FETCH)
-        block, merged = self.transformer.process_block(batch)
+        buffered0 = self.buffer.total_buffered
+        with self.tracer.span("transform.dispatch") as sp:
+            block, merged = self.transformer.process_block(batch)
+            if block is None:
+                sp.drop()
         if block is None:                # counts is empty on this path
             self.metrics.wall_s += time.perf_counter() - t0
             return 0
         self.fault.trip(TRANSFORM_DONE)
         block.start_host_copy()          # D2H rides behind the compute
-        facts, _ = self.transformer.finish(block, merged)
-        done = self.warehouse.load_partitioned(
-            facts, self.cfg.n_partitions, rollup=block.rollup_host(),
-            routing_epoch=self.queue.topics[topic].routing.epoch)
-        self.fault.trip(LOAD_PRE_COMMIT)
-        # commit AFTER the warehouse load (crash-consistency: a death
-        # between load and commit re-serves the records, but recovery
-        # rolls the warehouse back to its checkpoint first, so nothing
-        # double-loads; committing first would LOSE records instead —
-        # same order the concurrent runtime's load stage has always used)
-        for p, c in counts.items():
-            self.queue.commit(self.group, topic, p, c)
+        with self.tracer.span("load.commit") as sp:
+            facts, _ = self.transformer.finish(block, merged)
+            done = self.warehouse.load_partitioned(
+                facts, self.cfg.n_partitions, rollup=block.rollup_host(),
+                routing_epoch=self.queue.topics[topic].routing.epoch)
+            self.fault.trip(LOAD_PRE_COMMIT)
+            # commit AFTER the warehouse load (crash-consistency: a death
+            # between load and commit re-serves the records, but recovery
+            # rolls the warehouse back to its checkpoint first, so nothing
+            # double-loads; committing first would LOSE records instead —
+            # same order the concurrent runtime's load stage has always
+            # used)
+            for p, c in counts.items():
+                self.queue.commit(self.group, topic, p, c)
+            sp.put("records", done)
         self.fault.trip(COMMIT_POST)
+        # join-level cache accounting: a loaded fact's probes all hit; a
+        # record deferred to the late buffer missed its master rows
+        self._c_hits.inc(done)
+        self._c_misses.inc(self.buffer.total_buffered - buffered0)
         self.metrics.records += done
         self.metrics.wall_s += time.perf_counter() - t0
         return done
@@ -345,14 +381,25 @@ class DODETLPipeline:
 
     def __init__(self, cfg: ETLConfig, source: SourceDatabase,
                  n_workers: int = 1, join_depth: int = 1, backend=None,
-                 fault=None):
+                 fault=None, tracer=None, metrics=None):
         self.cfg = cfg
         self.source = source
         self.backend = get_backend(backend or cfg.backend or None)
         # deterministic fault injection (tests): shared by every worker and
         # the repartition coordinator; the default injector never trips
         self.fault = fault or NULL_INJECTOR
-        self.queue = MessageQueue()
+        # observability plane: one registry per pipeline (workers, broker
+        # topics and the coordinator all shard off it) and one tracer
+        # shared by every stage seam — both default to free no-ops
+        self.tracer = tracer or NULL_TRACER
+        self.metrics = metrics or MetricsRegistry()
+        self._coord_shard = self.metrics.shard("coordinator")
+        self._c_repartitions = self._coord_shard.counter(
+            "pipeline.repartitions")
+        self._c_rebalances = self._coord_shard.counter("pipeline.rebalances")
+        self._coord_shard.gauge_fn(
+            "routing_epoch", lambda: self.current_routing().epoch)
+        self.queue = MessageQueue(metrics=self.metrics)
         self.tracker = ChangeTracker(cfg, source.log, self.queue)
         self.warehouse = StarSchemaWarehouse(backend=self.backend)
         self.operational_topics = [self.tracker.topic_of(t.name)
@@ -377,6 +424,8 @@ class DODETLPipeline:
                                   join_depth, backend=self.backend)
         w._routing_topics = self.operational_topics
         w.fault = self.fault
+        w.tracer = self.tracer
+        w.attach_metrics(self.metrics.shard(name))
         return w
 
     def _master_topics(self) -> Dict[str, str]:
@@ -520,16 +569,19 @@ class DODETLPipeline:
         if new_table.epoch != cur.epoch:
             # phase 1: workers prepare — their key filter grows to the
             # union of live + pending epochs and caches migrate surgically
-            for w in self.workers:
-                prev = w.assigned_business_keys(self.cfg.n_business_keys)
-                w.set_pending_tables((new_table,))
-                stats = stats.merge(w.migrate_caches(
-                    self.master_topic_map, self.cfg.n_business_keys, prev))
+            with self.tracer.span("repartition.prepare"):
+                for w in self.workers:
+                    prev = w.assigned_business_keys(self.cfg.n_business_keys)
+                    w.set_pending_tables((new_table,))
+                    stats = stats.merge(w.migrate_caches(
+                        self.master_topic_map, self.cfg.n_business_keys,
+                        prev))
             # phase 2: atomically switch the publish epoch
-            for t in self.operational_topics:
-                self.queue.topics[t].set_routing(new_table)
-            for w in self.workers:
-                w.set_pending_tables(())
+            with self.tracer.span("repartition.epoch_switch"):
+                for t in self.operational_topics:
+                    self.queue.topics[t].set_routing(new_table)
+                for w in self.workers:
+                    w.set_pending_tables(())
             # mid-repartition crash seam: new epoch published, ownership
             # not yet rebalanced — the hardest recovery window (a restart
             # must resume with the new epoch live AND re-run the rebalance)
@@ -544,9 +596,11 @@ class DODETLPipeline:
         if len(keys):
             np.add.at(weights,
                       self.current_routing().partition_of(keys), counts)
-        stats = stats.merge(self._rebalance_and_transfer(
-            list(self.workers), weights=weights, surgical=True))
-        self._rehome_buffers()
+        with self.tracer.span("repartition.rebalance"):
+            stats = stats.merge(self._rebalance_and_transfer(
+                list(self.workers), weights=weights, surgical=True))
+            self._rehome_buffers()
+        self._c_repartitions.inc()
         return migration_summary(self.current_routing().epoch, moved,
                                  stats, initial_rows)
 
@@ -567,6 +621,7 @@ class DODETLPipeline:
         old_groups = {w.name: w.group for w in prior_workers}
         self.assignment.rebalance([w.name for w in self.workers], weights)
         self._apply_assignment()
+        self._c_rebalances.inc()
         for topic in self.operational_topics:
             for p, new_name in self.assignment.assignment.items():
                 old_name = old_owner.get(p)
@@ -612,6 +667,14 @@ class DODETLPipeline:
         for i in range(n):
             self.workers.append(self._new_worker(f"w{start + i}", join_depth))
         return self._rebalance_and_transfer(prior).dump_s
+
+    # -------------------------------------------------------- observability
+    def health(self) -> Dict:
+        """One structured health snapshot (see
+        ``repro.observability.health`` for the schema): per-worker
+        throughput and cache state, commit lag per topic/partition,
+        routing epoch, and the registry's merged counters."""
+        return build_pipeline_health(self)
 
     def checkpoint(self) -> Dict:
         return {

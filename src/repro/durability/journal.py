@@ -32,6 +32,7 @@ violate exactly-once.
 """
 from __future__ import annotations
 
+import itertools
 import json
 import os
 import shutil
@@ -41,7 +42,10 @@ import numpy as np
 
 from repro.durability.faults import (CHECKPOINT_MID_WRITE, FaultInjector,
                                      NULL_INJECTOR)
+from repro.observability.registry import global_registry
 from repro.train import checkpoint as ckpt
+
+_JOURNAL_SEQ = itertools.count()
 
 _LEAF = "__leaf__"      # placeholder key marking an extracted array leaf
 
@@ -124,6 +128,14 @@ class DurabilityJournal:
         self.root = str(root)
         self.fault = fault
         os.makedirs(self.root, exist_ok=True)
+        # one registry shard per journal INSTANCE (same idiom as compute
+        # backends): per-instance values stay isolated, merged reads sum
+        # process-wide journal activity
+        shard = global_registry().shard(f"journal#{next(_JOURNAL_SEQ)}")
+        self.metrics = shard
+        self._c_steps = shard.counter("journal.steps_appended")
+        self._c_loads = shard.counter("journal.loads")
+        self._c_pruned = shard.counter("journal.steps_pruned")
 
     # ------------------------------------------------------------------ write
     def steps(self) -> List[int]:
@@ -146,6 +158,7 @@ class DurabilityJournal:
         fault = self.fault
         ckpt.save(self._dir_for(step), step, leaves, extra,
                   pre_commit=lambda: fault.trip(CHECKPOINT_MID_WRITE))
+        self._c_steps.inc()
         return step
 
     def last_totals(self) -> Optional[Dict[str, Any]]:
@@ -207,6 +220,8 @@ class DurabilityJournal:
                     f"{later} present: not a consistent prefix")
             # tail crash: drop the torn step, recover from the prefix
             shutil.rmtree(self._dir_for(failed_at), ignore_errors=True)
+            self._c_pruned.inc()
+        self._c_loads.inc()
         if not restored:
             return None
         # chain validation + accumulation

@@ -42,6 +42,7 @@ from __future__ import annotations
 import contextlib
 import copy
 import threading
+import time
 from typing import Any, Dict, Optional, Tuple
 
 import numpy as np
@@ -60,6 +61,13 @@ class RecoveryCoordinator:
         self.journal = journal
         self._lock = threading.Lock()
         self._marks: Optional[Dict[str, Any]] = None   # cumulative, journaled
+        # health-snapshot surface: how many steps this coordinator took,
+        # when the last one landed (perf_counter — compare against "now"
+        # for checkpoint age) and at which journal step
+        self.checkpoints_taken = 0
+        self.restores_done = 0
+        self.last_checkpoint_at: Optional[float] = None
+        self.last_checkpoint_step: Optional[int] = None
 
     def _current_marks(self) -> Dict[str, Any]:
         if self._marks is None:
@@ -121,6 +129,11 @@ class RecoveryCoordinator:
             }
             step = self.journal.append(state, totals, prev)
             self._marks = totals
+            self.checkpoints_taken += 1
+            self.last_checkpoint_at = time.perf_counter()
+            self.last_checkpoint_step = step
+            pipe.metrics.shard("coordinator").counter(
+                "pipeline.checkpoints").inc()
             return step
 
     # ----------------------------------------------------------------- restore
@@ -179,6 +192,9 @@ class RecoveryCoordinator:
             replayed = int(state["warehouse"]["seq"]) - folded
             pipe.warehouse.attach_serving(engine, replay_from=folded)
         self._marks = copy.deepcopy(state["_totals"])
+        self.restores_done += 1
+        pipe.metrics.shard("coordinator").counter(
+            "pipeline.restores").inc()
         return {"step": int(state["_step"]),
                 "commit_seq": int(state["warehouse"]["seq"]),
                 "replayed_chunks": replayed}

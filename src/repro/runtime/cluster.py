@@ -45,6 +45,7 @@ from repro.core.records import RecordBatch
 from repro.durability.faults import (COMMIT_POST, INGEST_FETCH,
                                      LOAD_PRE_COMMIT, REPARTITION_MID,
                                      TRANSFORM_DONE, InjectedCrash)
+from repro.observability.health import build_cluster_health
 
 
 @dataclasses.dataclass
@@ -232,6 +233,18 @@ class WorkerRuntime:
         self.items_dropped_transform = 0
         self.latency = LatencyRecorder()
         self._threads: List[threading.Thread] = []
+        # observability: spans go to the pipeline's tracer (NULL_TRACER by
+        # default — zero-overhead seam); the runtime shares the worker's
+        # metrics shard, registers its freshness reservoir there (one read
+        # path, no second sample copy) and exposes queue depths as
+        # pull-mode gauges the hot path never touches
+        self.tracer = pipe.tracer
+        shard = pipe.metrics.shard(worker.name)
+        self.mshard = shard
+        shard.register_histogram("freshness", self.latency)
+        shard.gauge_fn("transform_q_depth", self.transform_q.qsize)
+        shard.gauge_fn("load_q_depth", self.load_q.qsize)
+        shard.gauge_fn("in_flight", self.in_flight)
 
     # ---------------------------------------------------------------- state
     @property
@@ -353,7 +366,12 @@ class WorkerRuntime:
                     break            # let retries drain the buffer first
                 if self.cap is not None:
                     cap = min(cap, self.cap)
-                batch, counts = w.fetch_operational(topic, cap)
+                with self.tracer.span("ingest.fetch") as sp:
+                    batch, counts = w.fetch_operational(topic, cap)
+                    if not counts:
+                        sp.drop()        # keep idle polling out of traces
+                    else:
+                        sp.put("records", len(batch))
                 if counts:
                     self.records_fetched += len(batch)
                     pipe.fault.trip(INGEST_FETCH)   # fetched, uncommitted
@@ -385,14 +403,16 @@ class WorkerRuntime:
             # snapshot; the dispatch itself runs lock-free, so the ingest
             # stage's master pumps overlap the numeric core instead of
             # queueing behind every dispatch
-            with self.cache_lock:
-                eq = self.worker.equipment.snapshot_view(device)
-                qu = self.worker.quality.snapshot_view(device)
-            # ONE fused transform+rollup dispatch, NO host sync: the block
-            # is handed to the load stage device-resident, with the D2H
-            # copy enqueued asynchronously behind the compute
-            block = self.worker.transformer.transform_block(
-                item.batch, eq, qu).start_host_copy()
+            with self.tracer.span("transform.dispatch") as sp:
+                with self.cache_lock:
+                    eq = self.worker.equipment.snapshot_view(device)
+                    qu = self.worker.quality.snapshot_view(device)
+                # ONE fused transform+rollup dispatch, NO host sync: the
+                # block is handed to the load stage device-resident, with
+                # the D2H copy enqueued asynchronously behind the compute
+                block = self.worker.transformer.transform_block(
+                    item.batch, eq, qu).start_host_copy()
+                sp.put("records", len(item.batch))
             self.pipe.fault.trip(TRANSFORM_DONE)   # transformed, unloaded
             if not self._put(self.load_q,
                              _Transformed(item.topic, item.batch, item.counts,
@@ -410,6 +430,11 @@ class WorkerRuntime:
         facts, found = block.to_host()
         w.buffer.push(batch.filter(~found))
         good = facts[found]
+        # join-level cache accounting (same counters the sequential worker
+        # feeds): hits joined now, misses went to the late buffer. Counted
+        # from the already-materialized host mask — no extra device sync.
+        w._c_hits.inc(len(good))
+        w._c_misses.inc(len(batch) - len(good))
         if not len(good):
             return 0
         log = self.pipe.source.log
@@ -462,15 +487,18 @@ class WorkerRuntime:
                 continue
             with self.commit_lock:
                 if not self.dead:
-                    self._load_and_record(item.batch, item.block)
-                    # loaded, offsets NOT committed — the window where a
-                    # crash leaves at-least-once exposure that recovery's
-                    # warehouse rollback turns back into exactly-once
-                    self.pipe.fault.trip(LOAD_PRE_COMMIT)
-                    for p, c in item.counts.items():
-                        self.worker.queue.commit(self.worker.group,
-                                                 item.topic, p, c)
-                    self.pipe.fault.trip(COMMIT_POST)
+                    with self.tracer.span("load.commit") as sp:
+                        done = self._load_and_record(item.batch, item.block)
+                        # loaded, offsets NOT committed — the window where
+                        # a crash leaves at-least-once exposure that
+                        # recovery's warehouse rollback turns back into
+                        # exactly-once
+                        self.pipe.fault.trip(LOAD_PRE_COMMIT)
+                        for p, c in item.counts.items():
+                            self.worker.queue.commit(self.worker.group,
+                                                     item.topic, p, c)
+                        self.pipe.fault.trip(COMMIT_POST)
+                        sp.put("records", done)
                 # retire AFTER the lates are buffered: between push and
                 # retirement the records are double-counted (buffer AND
                 # in-flight), which errs on the safe side of headroom
@@ -525,6 +553,11 @@ class ConcurrentCluster:
         self.serving = getattr(serving, "engine", serving)
         if self.serving is not None:
             pipe.warehouse.attach_serving(self.serving)
+            # serving joins the pipeline's observability plane: fold/query
+            # spans land on the same tracer, the staleness reservoir on
+            # the pipeline registry's "serving" shard
+            self.serving.tracer = pipe.tracer
+            self.serving.attach_metrics(pipe.metrics.shard("serving"))
         self.runtimes: Dict[str, WorkerRuntime] = {
             w.name: WorkerRuntime(w, pipe, max_records_per_partition)
             for w in pipe.workers}
@@ -573,8 +606,11 @@ class ConcurrentCluster:
             return None
         locks = [rt.commit_lock for _, rt in sorted(self.runtimes.items())
                  if not rt.dead]
-        return self.recovery.checkpoint(self.pipe, engine=self.serving,
-                                        extra_locks=locks)
+        with self.pipe.tracer.span("checkpoint.step") as sp:
+            step = self.recovery.checkpoint(self.pipe, engine=self.serving,
+                                            extra_locks=locks)
+            sp.put("step", step)
+        return step
 
     def _extract_loop(self) -> None:
         tracker = self.pipe.tracker
@@ -629,6 +665,14 @@ class ConcurrentCluster:
             self.serving.abort()         # stop folding, KEEP the backlog
 
     # ---------------------------------------------------------------- metrics
+    def health(self) -> Dict:
+        """One consistent ``ClusterHealth`` snapshot — per-worker
+        throughput/backlog, freshness & staleness percentiles, commit lag
+        per topic/partition, cache retention, checkpoint age, merged
+        counters. Lock-free and safe to poll while rebalances,
+        repartitions and checkpoints run (see observability.health)."""
+        return build_cluster_health(self)
+
     def alive_workers(self) -> List[str]:
         return [n for n, rt in self.runtimes.items() if not rt.dead]
 
@@ -751,6 +795,16 @@ class ConcurrentCluster:
         partition observed load) makes the sticky LPT assignment balance
         load, not just partition counts. Healthy workers never stop
         consuming the partitions they keep."""
+        pipe = self.pipe
+        with pipe.tracer.span("repartition.rebalance") as sp:
+            redump = self._rebalance_body(alive, weights)
+            sp.put("workers", len(alive))
+        pipe.metrics.shard("coordinator").counter(
+            "pipeline.rebalances").inc()
+        return redump
+
+    def _rebalance_body(self, alive: List[str],
+                        weights: Optional[np.ndarray] = None) -> float:
         pipe = self.pipe
         old_owner = dict(self.assignment.assignment)
         old_group = {n: rt.worker.group for n, rt in self.runtimes.items()}
@@ -939,21 +993,25 @@ class ConcurrentCluster:
         from repro.core.pipeline import CacheMigrationStats
         pipe = self.pipe
         stats = CacheMigrationStats()
-        pending = []
-        for name, rt in self.runtimes.items():
-            if rt.dead:
-                continue
-            msg = _Control("reroute", set(), tables=(new_table,))
-            rt.control.put(msg)
-            pending.append((rt, msg))
-        for rt, msg in pending:
-            if not msg.ack.wait(10.0):
-                raise RuntimeError(
-                    f"reroute ack timeout for {rt.worker.name}")
-            stats = stats.merge(msg.stats)
+        with pipe.tracer.span("repartition.prepare") as sp:
+            pending = []
+            for name, rt in self.runtimes.items():
+                if rt.dead:
+                    continue
+                msg = _Control("reroute", set(), tables=(new_table,))
+                rt.control.put(msg)
+                pending.append((rt, msg))
+            for rt, msg in pending:
+                if not msg.ack.wait(10.0):
+                    raise RuntimeError(
+                        f"reroute ack timeout for {rt.worker.name}")
+                stats = stats.merge(msg.stats)
+            sp.put("workers", len(pending))
         self.redump_s_total += stats.dump_s
-        for t in pipe.operational_topics:
-            pipe.queue.topics[t].set_routing(new_table)
+        with pipe.tracer.span("repartition.epoch_switch") as sp:
+            for t in pipe.operational_topics:
+                pipe.queue.topics[t].set_routing(new_table)
+            sp.put("epoch", new_table.epoch)
         return stats
 
     def _finish_migration(self, cur, stats, initial_rows) -> Dict:
@@ -1006,6 +1064,8 @@ class ConcurrentCluster:
             np.add.at(weights,
                       pipe.current_routing().partition_of(keys), counts)
         self._rebalance_to(self.alive_workers(), weights)
+        pipe.metrics.shard("coordinator").counter(
+            "pipeline.repartitions").inc()
         return self._finish_migration(cur, stats, initial_rows)
 
     def scale_partitions(self, n_partitions: int) -> Dict:

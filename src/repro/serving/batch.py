@@ -410,10 +410,14 @@ class BatchedReportServer:
         for tickets in groups.values():
             snap = tickets[0].snapshot
             try:
-                plan = compile_queries([t.query for t in tickets])
-                rsnap = ReportSnapshot(snap, self.engine.backend)
-                for t, rep in zip(tickets, plan.execute(rsnap).reports()):
-                    t._fulfill(rep)
+                with self.engine.tracer.span("query.batch") as sp:
+                    plan = compile_queries([t.query for t in tickets])
+                    rsnap = ReportSnapshot(snap, self.engine.backend)
+                    for t, rep in zip(tickets,
+                                      plan.execute(rsnap).reports()):
+                        t._fulfill(rep)
+                    sp.put("queries", len(tickets))
+                    sp.put("epoch", snap.epoch)
             except BaseException as exc:   # answer, never wedge a caller
                 for t in tickets:
                     if not t.done():

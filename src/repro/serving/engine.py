@@ -51,6 +51,7 @@ import numpy as np
 from repro.core.backend import (combine_fold, empty_fold_state, fold_width,
                                 get_backend)
 from repro.core.metrics import LatencyRecorder
+from repro.observability.tracer import NULL_TRACER
 from repro.serving.views import ViewSpec
 
 
@@ -188,6 +189,10 @@ class MaterializedViewEngine:
         # see docs/BENCHMARKS.md "scan fold" for the numbers.
         self.scan_fold = bool(scan_fold)
         self.staleness_recorder = LatencyRecorder()
+        # observability seam: fold/query spans go here (NULL_TRACER until a
+        # cluster wires a live StageTracer through); attach_metrics adopts
+        # the staleness reservoir into a registry shard
+        self.tracer = NULL_TRACER
         self._pending: "deque[FactDelta]" = deque()
         self._q_lock = threading.Lock()      # guards the pending deque
         self._fold_lock = threading.Lock()   # serializes fold cycles
@@ -236,43 +241,50 @@ class MaterializedViewEngine:
                 deltas = [self._pending.popleft() for _ in range(take)]
             if not deltas:
                 return 0
-            front = self._front
-            tables = {name: st.table for name, st in front.states.items()}
-            watermark = front.watermark_event_time
-            rows = 0
-            for d in deltas:
-                valid = d.facts[:, 9] > 0.5
-                vfacts = d.facts[valid]
-                rows += len(d.facts)
+            with self.tracer.span("serving.fold") as sp:
+                front = self._front
+                tables = {name: st.table
+                          for name, st in front.states.items()}
+                watermark = front.watermark_event_time
+                rows = 0
+                for d in deltas:
+                    valid = d.facts[:, 9] > 0.5
+                    vfacts = d.facts[valid]
+                    rows += len(d.facts)
+                    for spec in self.specs:
+                        fold = (self.backend.fold_segments_scan
+                                if self.scan_fold and spec.windowed
+                                else self.backend.fold_segments)
+                        agg = fold(spec.segments(vfacts),
+                                   spec.values(vfacts), spec.n_segments)
+                        tables[spec.name] = combine_fold(
+                            tables[spec.name], agg)
+                    watermark = max(watermark,
+                                    float(d.event_times.max())
+                                    if d.event_times is not None
+                                    and len(d.event_times)
+                                    else d.published_at)
+                states = {}
                 for spec in self.specs:
-                    fold = (self.backend.fold_segments_scan
-                            if self.scan_fold and spec.windowed
-                            else self.backend.fold_segments)
-                    agg = fold(spec.segments(vfacts), spec.values(vfacts),
-                               spec.n_segments)
-                    tables[spec.name] = combine_fold(tables[spec.name], agg)
-                watermark = max(watermark,
-                                float(d.event_times.max())
-                                if d.event_times is not None
-                                and len(d.event_times)
-                                else d.published_at)
-            states = {}
-            for spec in self.specs:
-                t = tables[spec.name]
-                t.flags.writeable = False
-                states[spec.name] = ViewState(spec, t)
-            snap = EpochSnapshot(
-                epoch=front.epoch + 1, states=states,
-                published_at=serving_clock(),
-                watermark_event_time=watermark,
-                rows_folded=front.rows_folded + rows,
-                deltas_folded=front.deltas_folded + len(deltas))
-            self._front = snap           # the atomic epoch swap
-            # visibility staleness: the swap made these records queryable
-            for d in deltas:
-                if d.event_times is not None:
-                    self.staleness_recorder.add(
-                        snap.published_at - d.event_times)
+                    t = tables[spec.name]
+                    t.flags.writeable = False
+                    states[spec.name] = ViewState(spec, t)
+                snap = EpochSnapshot(
+                    epoch=front.epoch + 1, states=states,
+                    published_at=serving_clock(),
+                    watermark_event_time=watermark,
+                    rows_folded=front.rows_folded + rows,
+                    deltas_folded=front.deltas_folded + len(deltas))
+                self._front = snap       # the atomic epoch swap
+                # visibility staleness: the swap made these records
+                # queryable
+                for d in deltas:
+                    if d.event_times is not None:
+                        self.staleness_recorder.add(
+                            snap.published_at - d.event_times)
+                sp.put("deltas", len(deltas))
+                sp.put("rows", rows)
+                sp.put("epoch", snap.epoch)
             return rows
 
     # --------------------------------------------------------------- read side
@@ -285,6 +297,14 @@ class MaterializedViewEngine:
         """p50/p95/p99 of per-record visibility staleness (CDC append ->
         queryable), measured on the same clock as load freshness."""
         return self.staleness_recorder.percentiles(drain)
+
+    def attach_metrics(self, shard) -> None:
+        """Join a registry: the staleness reservoir is adopted (not
+        copied) so ``registry.histogram_percentiles("staleness")`` reads
+        the live recorder, and the delta backlog becomes a pull gauge."""
+        shard.register_histogram("staleness", self.staleness_recorder)
+        shard.gauge_fn("pending_deltas", self.pending)
+        shard.gauge_fn("serving_epoch", lambda: self._front.epoch)
 
     def prewarm(self) -> None:
         """Compile the fold buckets a delta can hit (device backends jit
