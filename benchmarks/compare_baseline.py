@@ -85,6 +85,18 @@ GATES: Dict[str, List[Tuple[str, str]]] = {
         ("gates.overhead_enabled_ok", "bool"),
         ("gates.throughput_ratio_traced_vs_null", "higher"),
     ],
+    "BENCH_control_smoke.json": [
+        ("gates.complete", "bool"),
+        ("gates.controller_acted", "bool"),
+        ("gates.spike_recovered", "bool"),
+        ("gates.human_calls_zero", "bool"),
+        ("gates.detection_within_bound", "bool"),
+        ("gates.byte_identical", "bool"),
+        ("gates.restart_ok", "bool"),
+        ("gates.poison_quarantined", "bool"),
+        ("gates.no_crash_loop", "bool"),
+        ("detection.latency_s", "lower"),
+    ],
 }
 
 

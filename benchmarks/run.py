@@ -76,6 +76,12 @@ def main() -> None:
     from benchmarks import observability_overhead as OO
     emit("observability", OO.summary(quick=args.quick))
 
+    # self-healing control plane: grey-failure detection latency + poison
+    # quarantine contracts (full sweep incl. the load-spike drill:
+    # python -m benchmarks.control_loop -> BENCH_control.json)
+    from benchmarks import control_loop as CL
+    emit("control", CL.summary(quick=args.quick))
+
     # roofline summary (if the dry-run matrix has been produced)
     try:
         from benchmarks.roofline import load_cells, roofline_fraction

@@ -40,6 +40,10 @@ class ETLConfig:
     handoff_depth: int = 4       # bounded hand-off queue slots between the
                                  # ingest -> transform -> load worker stages
     idle_backoff_s: float = 0.001  # stage sleep when its input is drained
+    credit_capacity: int = 4096  # per-worker flow-control credits (records):
+                                 # ingest spends on fetch, load refunds at
+                                 # commit — a stalled downstream exhausts the
+                                 # ledger and throttles extraction
 
     def table(self, name: str) -> TableConfig:
         for t in self.tables:

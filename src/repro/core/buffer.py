@@ -84,3 +84,56 @@ class OperationalMessageBuffer:
                                     for k, v in state["batch"].items()})
         buf.dropped = state.get("dropped", 0)
         return buf
+
+
+class DeadLetterBuffer:
+    """Quarantine for poison records — operational records whose transform
+    deterministically raises. Instead of crash-looping the worker, the load
+    stage commits their offsets (a quarantined record counts as *handled*:
+    it will never replay) and parks the records here for operator triage.
+
+    Append-only during a run; ``drain()`` is the operator's exit (see
+    docs/OPERATIONS.md). Exported/restored with worker state so a
+    checkpoint+recovery cannot silently lose quarantined records whose
+    offsets are already committed."""
+
+    def __init__(self):
+        self._batch: RecordBatch = RecordBatch.empty()
+        self.reasons: list = []
+        self.total_quarantined = 0
+
+    def __len__(self) -> int:
+        return len(self._batch)
+
+    def push(self, dead: RecordBatch, reason: str = "transform-error") -> None:
+        if not len(dead):
+            return
+        self.total_quarantined += len(dead)
+        self.reasons.append({"reason": reason, "records": int(len(dead))})
+        self._batch = RecordBatch.concat([self._batch, dead])
+
+    def peek(self) -> RecordBatch:
+        return self._batch
+
+    def drain(self) -> RecordBatch:
+        out = self._batch
+        self._batch = RecordBatch.empty()
+        self.reasons = []
+        return out
+
+    # ---------------------------------------------------------- durability
+    def export_state(self) -> dict:
+        return {"batch": self._batch.as_dict(),
+                "reasons": list(self.reasons),
+                "total": self.total_quarantined}
+
+    @staticmethod
+    def restore(state: Optional[dict]) -> "DeadLetterBuffer":
+        dlq = DeadLetterBuffer()
+        if state is None:     # journal predates the dead-letter plane
+            return dlq
+        dlq._batch = RecordBatch(**{k: np.asarray(v)
+                                    for k, v in state["batch"].items()})
+        dlq.reasons = list(state.get("reasons", []))
+        dlq.total_quarantined = int(state.get("total", len(dlq._batch)))
+        return dlq

@@ -405,6 +405,12 @@ class MessageQueue:
         self.offsets: Dict[Tuple[str, str, int], int] = {}  # (group, topic, part)
         self.positions: Dict[Tuple[str, str, int], int] = {}
         self._olock = threading.RLock()
+        # fenced consumer groups: an evicted-but-possibly-zombie worker's
+        # group is fenced so a late commit/fetch from its wedged thread is
+        # dropped (worker names — and therefore groups — are never reused)
+        self._fenced: set = set()
+        self.fenced_commits = 0
+        self.fenced_fetches = 0
         # per-topic publish counters land on this registry — the pipeline
         # passes its own so broker signals share its one read path
         self.metrics = metrics if metrics is not None else MetricsRegistry()
@@ -459,6 +465,10 @@ class MessageQueue:
         owner committed."""
         out: List[RecordBatch] = []
         counts: Dict[int, int] = {}
+        with self._olock:
+            if group in self._fenced:
+                self.fenced_fetches += 1
+                return RecordBatch.concat(out), counts
         t = self.topics[topic]
         for p in partitions:
             key = (group, topic, p)
@@ -481,7 +491,25 @@ class MessageQueue:
     def commit(self, group: str, topic: str, partition: int, n: int) -> None:
         key = (group, topic, partition)
         with self._olock:
+            if group in self._fenced:
+                self.fenced_commits += 1
+                return
             self.offsets[key] = self.offsets.get(key, 0) + n
+
+    def fence_group(self, group: str) -> None:
+        """Permanently fence a consumer group: subsequent commits and
+        fetches from it are dropped. Called when a worker is forcibly
+        evicted (hang/straggler) — its stage threads may still be wedged
+        mid-loop and must not move offsets after ownership has been
+        transferred to a survivor. Groups derive from worker names and
+        names are never reused, so the fence never blocks a legitimate
+        successor."""
+        with self._olock:
+            self._fenced.add(group)
+
+    def is_fenced(self, group: str) -> bool:
+        with self._olock:
+            return group in self._fenced
 
     def rewind(self, group: str, topic: str, partition: int) -> None:
         """Drop a group's read-ahead: next fetch resumes from the committed

@@ -16,7 +16,7 @@ import numpy as np
 
 from repro.configs.dod_etl import ETLConfig
 from repro.core.backend import get_backend
-from repro.core.buffer import OperationalMessageBuffer
+from repro.core.buffer import DeadLetterBuffer, OperationalMessageBuffer
 from repro.core.cache import InMemoryTable
 from repro.core.cdc import SourceDatabase
 from repro.core.listener import ChangeTracker
@@ -125,6 +125,9 @@ class StreamProcessorWorker:
         self.quality = InMemoryTable(cfg.cache_slots, cfg.cache_row_width,
                                      backend=self.backend)
         self.buffer = OperationalMessageBuffer(cfg.buffer_capacity)
+        # poison-record quarantine: records whose transform deterministically
+        # raises are parked here (offsets committed) instead of crash-looping
+        self.dead_letter = DeadLetterBuffer()
         # n_units wires the fused transform_and_rollup: every transform
         # dispatch also carries the per-unit KPI aggregate (equipment ids
         # ARE the business keys), feeding warehouse.kpi_running in O(1)
@@ -153,7 +156,9 @@ class StreamProcessorWorker:
         shard = self.mshard
         self._c_hits = shard.counter("worker.cache_hits")
         self._c_misses = shard.counter("worker.cache_misses")
+        self._c_dead = shard.counter("worker.dead_lettered")
         shard.gauge_fn("buffer_occupancy", lambda: len(self.buffer))
+        shard.gauge_fn("dead_letter_occupancy", lambda: len(self.dead_letter))
         shard.gauge_fn("cache_rows",
                        lambda: self.equipment.n_rows + self.quality.n_rows)
 

@@ -97,6 +97,7 @@ class RecoveryCoordinator:
                 "workers": {
                     w.name: {
                         "buffer": w.buffer.export_state(),
+                        "dead_letter": w.dead_letter.export_state(),
                         "watermarks": {
                             "equipment": int(w.equipment.watermark),
                             "quality": int(w.quality.watermark),
@@ -177,6 +178,9 @@ class RecoveryCoordinator:
                 continue
             w.buffer = _restore_buffer(ws["buffer"], pipe.cfg.buffer_capacity)
             w.transformer.buffer = w.buffer
+            # quarantined records' offsets are committed — losing the DLQ
+            # across a restore would silently lose the records themselves
+            w.dead_letter = _restore_dead_letter(ws.get("dead_letter"))
             w.reset_caches(pipe.master_topic_map, pipe.cfg.n_business_keys)
             w.equipment.watermark = int(ws["watermarks"]["equipment"])
             w.quality.watermark = int(ws["watermarks"]["quality"])
@@ -238,3 +242,8 @@ def recover_pipeline(cfg, source, journal: DurabilityJournal, *,
 def _restore_buffer(state: Dict[str, Any], capacity: int):
     from repro.core.buffer import OperationalMessageBuffer
     return OperationalMessageBuffer.restore(state, capacity)
+
+
+def _restore_dead_letter(state: Optional[Dict[str, Any]]):
+    from repro.core.buffer import DeadLetterBuffer
+    return DeadLetterBuffer.restore(state)

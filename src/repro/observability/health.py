@@ -28,6 +28,8 @@ Schema (``build_cluster_health``)::
       "workers": {name: {"alive", "partitions", "records_done",
                          "records_fetched", "throughput_rps", "in_flight",
                          "transform_q", "load_q", "buffer",
+                         "dead_lettered", "credits_available",
+                         "heartbeat_max_age_s",
                          "cache_rows", "freshness": {p50/p95/p99_ms, n}}},
       "freshness":  cluster-merged p50/p95/p99 (ms),
       "staleness":  serving-side percentiles (or None),
@@ -37,6 +39,10 @@ Schema (``build_cluster_health``)::
       "routing_epoch": int,
       "cache": {"rows", "retention_last_migration"},
       "checkpoint": {"steps", "last_step", "age_s"} (or None),
+      "control":   {"enabled", "degraded", "breaker_open", "suspects",
+                    "evictions", "restarts", "dead_lettered", ...} —
+                    ControlPlane.snapshot() when a control plane is
+                    attached, a static same-shape stub otherwise,
       "counters":  merged registry counters (pipeline + process-global),
     }
 """
@@ -97,13 +103,17 @@ def build_cluster_health(cluster) -> Dict:
     workers: Dict[str, Dict] = {}
     total_buffered = 0
     total_cache_rows = 0
+    total_dead_lettered = 0
     for name, rt in runtimes.items():
         w = rt.worker
         buffered = len(w.buffer)
+        dead_lettered = len(w.dead_letter)
         cache_rows = w.equipment.n_rows + w.quality.n_rows
+        total_dead_lettered += dead_lettered
         if not rt.dead:
             total_buffered += buffered
             total_cache_rows += cache_rows
+        hb_ages = [rt.heartbeat_age(s) for s in rt.hb]
         workers[name] = {
             "alive": rt.alive,
             "partitions": sorted(p for p, o in assignment.items()
@@ -116,6 +126,10 @@ def build_cluster_health(cluster) -> Dict:
             "transform_q": rt.transform_q.qsize(),
             "load_q": rt.load_q.qsize(),
             "buffer": buffered,
+            "dead_lettered": dead_lettered,
+            "credits_available": rt.credits.available,
+            "heartbeat_max_age_s": round(max(hb_ages), 4) if hb_ages
+            else None,
             "cache_rows": cache_rows,
             "cache": {"equipment": w.equipment.stats(),
                       "quality": w.quality.stats()},
@@ -136,6 +150,18 @@ def build_cluster_health(cluster) -> Dict:
         serving = {"epoch": snap.epoch,
                    "pending_deltas": engine.pending(),
                    "data_age_ms": round(snap.staleness_ms(), 3)}
+
+    # control plane: the supervisor/controller's own snapshot when one is
+    # attached; a same-shape stub otherwise so consumers (and the
+    # controller's own drills) never branch on schema
+    ctrl = getattr(cluster, "control", None)
+    if ctrl is not None:
+        control = ctrl.snapshot()
+    else:
+        control = {"enabled": False, "crashed": False, "degraded": False,
+                   "breaker_open": False, "suspects": [],
+                   "evictions": 0, "restarts": 0, "restart_failures": 0,
+                   "dead_lettered": total_dead_lettered}
 
     checkpoint: Optional[Dict] = None
     rec = cluster.recovery
@@ -164,6 +190,7 @@ def build_cluster_health(cluster) -> Dict:
                       cluster.last_migration.get("cache_retention")
                       if cluster.last_migration else None},
         "checkpoint": checkpoint,
+        "control": control,
         "counters": merged_counters(pipe),
     }
 

@@ -33,7 +33,8 @@ import dataclasses
 import queue as queue_mod
 import threading
 import time
-from typing import Dict, Iterable, List, Optional, Set
+import warnings
+from typing import Dict, Iterable, List, Optional, Set, Union
 
 import numpy as np
 
@@ -42,10 +43,13 @@ from repro.core.cdc import ChangeLog, SourceDatabase
 from repro.core.metrics import LatencyRecorder, percentiles_ms
 from repro.core.pipeline import DODETLPipeline, StreamProcessorWorker
 from repro.core.records import RecordBatch
-from repro.durability.faults import (COMMIT_POST, INGEST_FETCH,
-                                     LOAD_PRE_COMMIT, REPARTITION_MID,
-                                     TRANSFORM_DONE, InjectedCrash)
+from repro.durability.faults import (COMMIT_POST, HEARTBEAT_MISS,
+                                     INGEST_FETCH, LOAD_PRE_COMMIT,
+                                     REPARTITION_MID, TRANSFORM_DONE,
+                                     InjectedCrash)
 from repro.observability.health import build_cluster_health
+from repro.runtime.control import (ControlConfig, ControlPlane, CreditLedger,
+                                   QuiesceTimeout, QuiesceTimeoutWarning)
 
 
 @dataclasses.dataclass
@@ -159,11 +163,19 @@ class _Transformed:
     dispatch — the block materializes to host in the LOAD stage (the
     step's single device sync), so device compute and the async D2H copy
     overlap this worker's load-side host work (queue commits, partition
-    split, buffer accounting) instead of serializing behind it."""
+    split, buffer accounting) instead of serializing behind it.
+
+    ``batch``/``block`` carry only the transformable records; ``dead``
+    (usually None) carries poison records the transform stage isolated —
+    the load stage quarantines them to the worker's dead-letter buffer
+    and still commits their offsets (quarantined == handled)."""
     topic: str
     batch: RecordBatch
     counts: Dict[int, int]
-    block: object                   # repro.core.backend.FactBlock
+    block: object                   # repro.core.backend.FactBlock (or None
+                                    # when every record in the batch was
+                                    # poison)
+    dead: object = None             # RecordBatch of quarantined records
 
 
 @dataclasses.dataclass
@@ -232,6 +244,14 @@ class WorkerRuntime:
         self.items_dropped_ingest = 0        # ditto, item granularity
         self.items_dropped_transform = 0
         self.latency = LatencyRecorder()
+        # credit-based backpressure: ingest takes before every fetch,
+        # load refunds at retire time. Non-blocking by construction.
+        self.credits = CreditLedger(pipe.cfg.credit_capacity)
+        # stage heartbeats (perf_counter of each loop's last iteration):
+        # the control plane's failure-detection input. Plain dict writes
+        # (GIL-atomic) — ages surface as pull-mode gauges below.
+        self.hb: Dict[str, float] = {}
+        self.started_at: Optional[float] = None
         self._threads: List[threading.Thread] = []
         # observability: spans go to the pipeline's tracer (NULL_TRACER by
         # default — zero-overhead seam); the runtime shares the worker's
@@ -245,6 +265,10 @@ class WorkerRuntime:
         shard.gauge_fn("transform_q_depth", self.transform_q.qsize)
         shard.gauge_fn("load_q_depth", self.load_q.qsize)
         shard.gauge_fn("in_flight", self.in_flight)
+        shard.gauge_fn("credits_available", lambda: self.credits.available)
+        for stage in ("ingest", "transform", "load"):
+            shard.gauge_fn(f"heartbeat_age.{stage}",
+                           lambda s=stage: self.heartbeat_age(s))
 
     # ---------------------------------------------------------------- state
     @property
@@ -255,7 +279,23 @@ class WorkerRuntime:
         return (self.fetched - self.completed - self.items_dropped_ingest
                 - self.items_dropped_transform)
 
+    def beat(self, stage: str) -> None:
+        """Stage-loop heartbeat: every loop iterates at poll cadence even
+        when idle, so a silent stage is hung or dead, never just bored.
+        Also a fault seam — a ``hang`` scheduled at ``heartbeat.miss``
+        freezes whichever stage thread reaches the ordinal (the grey
+        failure the supervisor exists to detect)."""
+        self.hb[stage] = time.perf_counter()
+        self.pipe.fault.trip(HEARTBEAT_MISS)
+
+    def heartbeat_age(self, stage: str) -> float:
+        t = self.hb.get(stage)
+        return time.perf_counter() - t if t is not None else -1.0
+
     def start(self) -> None:
+        self.started_at = time.perf_counter()
+        for stage in ("ingest", "transform", "load"):
+            self.hb[stage] = self.started_at
         for fn, tag in ((self._ingest_loop, "ingest"),
                         (self._transform_loop, "transform"),
                         (self._load_loop, "load")):
@@ -264,10 +304,29 @@ class WorkerRuntime:
             t.start()
             self._threads.append(t)
 
-    def join(self, timeout: float = 5.0) -> None:
+    def join(self, timeout: float = 5.0) -> List[str]:
+        """Join the stage threads within one shared ``timeout`` budget.
+        Threads still alive afterwards are *wedged* (hung in a fetch, a
+        dispatch, or a fault-injected freeze): their names are returned,
+        a ``QuiesceTimeoutWarning`` is emitted and ``worker.join_timeouts``
+        counts them — a stop that strands a thread must never read as a
+        clean success. The thread list is cleared either way; a wedged
+        daemon thread can only no-op from here (its runtime is flagged
+        dead and its consumer group is fenced by forced eviction)."""
+        deadline = time.perf_counter() + timeout
+        wedged: List[str] = []
         for t in self._threads:
-            t.join(timeout)
+            t.join(max(0.0, deadline - time.perf_counter()))
+            if t.is_alive():
+                wedged.append(t.name)
         self._threads = []
+        if wedged:
+            self.mshard.counter("worker.join_timeouts").inc(len(wedged))
+            warnings.warn(
+                f"{self.worker.name}: stage thread(s) still alive after "
+                f"{timeout:.1f}s join: {', '.join(wedged)}",
+                QuiesceTimeoutWarning, stacklevel=2)
+        return wedged
 
     # ---------------------------------------------------------- stage plumbing
     def _put(self, q: "queue_mod.Queue", item) -> bool:
@@ -294,7 +353,12 @@ class WorkerRuntime:
                 return
             w = self.worker
             nbk = self.pipe.cfg.n_business_keys
-            if msg.kind == "revoke":
+            if msg.kind == "ping":
+                # supervisor liveness probe: an ack proves the ingest
+                # loop still drains controls (heartbeat freshness proves
+                # the rest — see ControlPlane._supervise)
+                msg.ack.set()
+            elif msg.kind == "revoke":
                 w.partitions = [p for p in w.partitions
                                 if p not in msg.partitions]
                 msg.fetched_at_ack = self.fetched
@@ -348,6 +412,7 @@ class WorkerRuntime:
     def _ingest_body(self) -> None:
         pipe, w = self.pipe, self.worker
         while not self.stop.is_set():
+            self.beat("ingest")
             self._apply_control()
             with self.cache_lock:
                 w.pump_master(pipe.master_topic_map["equipment"], w.equipment)
@@ -356,22 +421,34 @@ class WorkerRuntime:
             for topic in pipe.operational_topics:
                 if self.stop.is_set():
                     break
-                # backpressure: a fetch may return up to cap records from
-                # EVERY owned partition, so the per-partition cap must keep
-                # the worst case within headroom — flooring it at 1 here
-                # would over-fetch and let a 100%-late batch overflow the
-                # buffer (dropping committed records for good)
-                cap = self._buffer_headroom() // max(1, len(w.partitions))
+                # backpressure, two ledgers: a fetch may return up to cap
+                # records from EVERY owned partition, so the per-partition
+                # cap must keep the worst case within the late buffer's
+                # headroom — flooring it at 1 here would over-fetch and
+                # let a 100%-late batch overflow the buffer (dropping
+                # committed records for good). On top of that sits the
+                # explicit credit ledger: credits are TAKEN here (never
+                # blocking) and refunded by the load stage at retire time,
+                # so a stalled downstream drains the ledger and ingest
+                # simply stops fetching (and the extractor backs off).
+                nparts = max(1, len(w.partitions))
+                cap = self._buffer_headroom() // nparts
                 if cap < 1:
                     break            # let retries drain the buffer first
                 if self.cap is not None:
                     cap = min(cap, self.cap)
+                grant = self.credits.take(cap * nparts)
+                per_cap = grant // nparts
+                if per_cap < 1:
+                    self.credits.refund(grant)
+                    break            # starved: wait for load-side refunds
                 with self.tracer.span("ingest.fetch") as sp:
-                    batch, counts = w.fetch_operational(topic, cap)
+                    batch, counts = w.fetch_operational(topic, per_cap)
                     if not counts:
                         sp.drop()        # keep idle polling out of traces
                     else:
                         sp.put("records", len(batch))
+                self.credits.refund(grant - len(batch))  # unused grant
                 if counts:
                     self.records_fetched += len(batch)
                     pipe.fault.trip(INGEST_FETCH)   # fetched, uncommitted
@@ -380,6 +457,7 @@ class WorkerRuntime:
                                      _Work(topic, batch, counts)):
                         self.items_dropped_ingest += 1   # shutdown only
                         self.records_dropped_ingest += len(batch)
+                        self.credits.refund(len(batch))
                     got += len(batch)
             if not got:
                 time.sleep(pipe.cfg.idle_backoff_s)
@@ -394,6 +472,7 @@ class WorkerRuntime:
     def _transform_body(self) -> None:
         device = self.worker.backend.device
         while True:
+            self.beat("transform")
             item = self._get(self.transform_q)
             if item is None:
                 if self.stop.is_set():
@@ -407,18 +486,64 @@ class WorkerRuntime:
                 with self.cache_lock:
                     eq = self.worker.equipment.snapshot_view(device)
                     qu = self.worker.quality.snapshot_view(device)
-                # ONE fused transform+rollup dispatch, NO host sync: the
-                # block is handed to the load stage device-resident, with
-                # the D2H copy enqueued asynchronously behind the compute
-                block = self.worker.transformer.transform_block(
-                    item.batch, eq, qu).start_host_copy()
+                good, block, dead = self._transform_quarantine(
+                    item.batch, eq, qu)
                 sp.put("records", len(item.batch))
             self.pipe.fault.trip(TRANSFORM_DONE)   # transformed, unloaded
             if not self._put(self.load_q,
-                             _Transformed(item.topic, item.batch, item.counts,
-                                          block)):
+                             _Transformed(item.topic, good, item.counts,
+                                          block, dead=dead)):
                 self.items_dropped_transform += 1        # shutdown only
                 self.records_dropped_transform += len(item.batch)
+                self.credits.refund(len(item.batch))
+
+    def _transform_quarantine(self, batch: RecordBatch, eq, qu):
+        """ONE fused transform+rollup dispatch, NO host sync: the block
+        is handed to the load stage device-resident, with the D2H copy
+        enqueued asynchronously behind the compute.
+
+        Poison handling: a transform that raises a plain ``Exception``
+        (never ``InjectedCrash`` — drills must still kill the thread) is
+        re-probed by bisection to isolate the records that
+        deterministically fail. Good records keep their original order
+        and proceed; poison records ride the hand-off in ``dead`` and
+        are quarantined (offsets still committed) by the load stage —
+        the worker never crash-loops on a bad record. Returns
+        ``(good_batch, block_or_None, dead_batch_or_None)``."""
+        tf = self.worker.transformer
+        try:
+            return batch, tf.transform_block(batch, eq, qu
+                                             ).start_host_copy(), None
+        except InjectedCrash:
+            raise
+        except Exception:
+            pass
+        good_idx: List[np.ndarray] = []
+        dead_idx: List[np.ndarray] = []
+        stack = [np.arange(len(batch))]
+        while stack:
+            idx = stack.pop()
+            try:
+                tf.transform_block(batch.take(idx), eq, qu)   # probe
+                good_idx.append(idx)
+            except InjectedCrash:
+                raise
+            except Exception:
+                if len(idx) == 1:
+                    dead_idx.append(idx)
+                else:
+                    mid = len(idx) // 2
+                    stack.append(idx[mid:])
+                    stack.append(idx[:mid])
+        gsel = (np.sort(np.concatenate(good_idx)) if good_idx
+                else np.zeros(0, np.int64))
+        dsel = (np.sort(np.concatenate(dead_idx)) if dead_idx
+                else np.zeros(0, np.int64))
+        good = batch.take(gsel)
+        dead = batch.take(dsel)
+        block = (tf.transform_block(good, eq, qu).start_host_copy()
+                 if len(good) else None)
+        return good, block, (dead if len(dead) else None)
 
     # ------------------------------------------------------------- stage: load
     def _load_and_record(self, batch: RecordBatch, block) -> int:
@@ -466,9 +591,15 @@ class WorkerRuntime:
                 with self.cache_lock:
                     eq = w.equipment.snapshot_view(device)
                     qu = w.quality.snapshot_view(device)
-                block = w.transformer.transform_block(
-                    ready, eq, qu).start_host_copy()
-                self._load_and_record(ready, block)
+                # the retry path meets poison records too (a poison
+                # record that was merely *late* first) — same quarantine
+                good, block, dead = self._transform_quarantine(
+                    ready, eq, qu)
+                if dead is not None:
+                    w.dead_letter.push(dead, reason="transform-poison")
+                    w._c_dead.inc(len(dead))
+                if block is not None:
+                    self._load_and_record(good, block)
             self.retry_inflight = 0
 
     def _load_loop(self) -> None:
@@ -479,16 +610,28 @@ class WorkerRuntime:
 
     def _load_body(self) -> None:
         while True:
+            self.beat("load")
             item = self._get(self.load_q)
             if item is None:
                 if self.stop.is_set() and self.transform_q.empty():
                     return
                 self._retry_sweep()       # idle: drain watermark-ready lates
                 continue
+            n_dead = len(item.dead) if item.dead is not None else 0
+            n_total = len(item.batch) + n_dead
             with self.commit_lock:
                 if not self.dead:
                     with self.tracer.span("load.commit") as sp:
-                        done = self._load_and_record(item.batch, item.block)
+                        done = (self._load_and_record(item.batch, item.block)
+                                if item.block is not None else 0)
+                        if item.dead is not None:
+                            # poison quarantine: park the records, count
+                            # them, and STILL commit their offsets below
+                            # — a quarantined record is handled, never
+                            # replayed into the same crash
+                            self.worker.dead_letter.push(
+                                item.dead, reason="transform-poison")
+                            self.worker._c_dead.inc(n_dead)
                         # loaded, offsets NOT committed — the window where
                         # a crash leaves at-least-once exposure that
                         # recovery's warehouse rollback turns back into
@@ -502,13 +645,17 @@ class WorkerRuntime:
                 # retire AFTER the lates are buffered: between push and
                 # retirement the records are double-counted (buffer AND
                 # in-flight), which errs on the safe side of headroom
-                self.records_retired += len(item.batch)
+                self.records_retired += n_total
                 # completed is bumped LAST, still under the lock: a
                 # coordinator quiescing on it (under this lock) is
                 # guaranteed to also observe the item's offset commits —
                 # bumping it first let a rebalance read a stale committed
                 # offset and replay a whole partition at its new owner
                 self.completed += 1
+            # refund the full fetch (lates/quarantined included: they
+            # left the in-flight window — lates are buffer-bounded, not
+            # credit-bounded)
+            self.credits.refund(n_total)
             self._retry_sweep()
 
 
@@ -532,10 +679,23 @@ class ConcurrentCluster:
     def __init__(self, pipe: DODETLPipeline, *,
                  max_records_per_partition: Optional[int] = None,
                  poll_cdc: bool = True, serving=None,
-                 recovery=None, checkpoint_every_s: Optional[float] = None):
+                 recovery=None, checkpoint_every_s: Optional[float] = None,
+                 control: Union[None, bool, ControlConfig] = None):
         self.pipe = pipe
         self.cap = max_records_per_partition
         self.poll_cdc = poll_cdc
+        # coordinator actions (failover, eviction, resize, repartition)
+        # serialize here: the autonomous control plane and user calls may
+        # now race, and the rebalance machinery assumes one driver.
+        # Reentrant — scale_to legitimately nests fail_workers.
+        self._coord_lock = threading.RLock()
+        # self-healing control plane (supervision + autonomous scaling):
+        # opt-in via `control=True` (defaults) or a ControlConfig
+        self.control: Optional[ControlPlane] = None
+        if control:
+            self.control = ControlPlane(
+                self, control if isinstance(control, ControlConfig)
+                else ControlConfig())
         # durability: a RecoveryCoordinator makes `checkpoint()` journal
         # consistent snapshots; `checkpoint_every_s` adds a periodic
         # checkpointer thread alongside the stage threads
@@ -587,6 +747,8 @@ class ConcurrentCluster:
             self._ckpt_thread = threading.Thread(
                 target=self._ckpt_loop, daemon=True, name="durability.ckpt")
             self._ckpt_thread.start()
+        if self.control is not None:
+            self.control.start()
 
     def _ckpt_loop(self) -> None:
         while not self._stop_ckpt.wait(self.checkpoint_every_s):
@@ -612,14 +774,26 @@ class ConcurrentCluster:
             sp.put("step", step)
         return step
 
+    def _credits_exhausted(self) -> bool:
+        """True when EVERY live worker's credit ledger is drained — the
+        end-to-end backpressure signal: downstream has stopped refunding,
+        so extraction publishing more would only grow broker backlog."""
+        rts = [rt for rt in list(self.runtimes.values()) if not rt.dead]
+        return bool(rts) and all(rt.credits.exhausted() for rt in rts)
+
     def _extract_loop(self) -> None:
         tracker = self.pipe.tracker
         idle = self.pipe.cfg.idle_backoff_s
         while not self._stop_extract.is_set():
+            if self._credits_exhausted():
+                time.sleep(0.005)        # stalled downstream throttles
+                continue                 # extraction, not just fetching
             if tracker.poll_all() == 0:
                 time.sleep(idle)
 
     def stop_all(self) -> None:
+        if self.control is not None:
+            self.control.stop()    # before the heartbeats it watches stop
         self._stop_extract.set()
         self._stop_ckpt.set()
         for rt in self.runtimes.values():
@@ -645,6 +819,8 @@ class ConcurrentCluster:
         and broker/warehouse objects are simply abandoned, and recovery
         starts from fresh objects + the journal (tests assert the result
         matches an uninterrupted run byte-for-byte)."""
+        if self.control is not None:
+            self.control.stop()
         self._stop_extract.set()
         self._stop_ckpt.set()
         for rt in self.runtimes.values():
@@ -781,7 +957,7 @@ class ConcurrentCluster:
             if done >= horizon:
                 return
             if time.perf_counter() - t0 > timeout:
-                raise RuntimeError(
+                raise QuiesceTimeout(
                     f"quiesce timeout for {rt.worker.name}")
             time.sleep(0.002)
 
@@ -830,7 +1006,8 @@ class ConcurrentCluster:
             pending.append((rt, msg))
         for rt, msg in pending:
             if not msg.ack.wait(10.0):
-                raise RuntimeError(f"revoke ack timeout for {rt.worker.name}")
+                raise QuiesceTimeout(
+                    f"revoke ack timeout for {rt.worker.name}")
             self._quiesce(rt, msg.fetched_at_ack)
 
         # phase 2: exactly-once offset handoff for every moved partition
@@ -859,7 +1036,8 @@ class ConcurrentCluster:
             pending.append((self.runtimes[nw], msg))
         for rt, msg in pending:
             if not msg.ack.wait(10.0):
-                raise RuntimeError(f"grant ack timeout for {rt.worker.name}")
+                raise QuiesceTimeout(
+                    f"grant ack timeout for {rt.worker.name}")
             redump += msg.redump_s
             if msg.stats is not None:
                 stats = stats.merge(msg.stats)
@@ -909,57 +1087,118 @@ class ConcurrentCluster:
         re-serves those records to the partitions' new owners from the
         committed offsets), reassign their partitions incrementally, adopt
         their replicated late buffers. Returns cache re-dump seconds."""
-        names = list(names)
-        dead_rts = []
-        for n in names:
-            rt = self.runtimes[n]
-            with rt.commit_lock:       # atomic vs the load stage
-                rt.dead = True
-            rt.stop.set()
-            dead_rts.append(rt)
-        for rt in dead_rts:
-            rt.join()
-        alive = [n for n in self.runtimes if not self.runtimes[n].dead]
-        if not alive:
-            raise RuntimeError("all workers failed")
-        self.pipe.workers = [w for w in self.pipe.workers
-                             if w.name not in names]
-        # replicated-buffer adoption: a survivor inherits the dead workers'
-        # late records before the rebalance; `_rebalance_to` then re-homes
-        # every buffered record to its partition's new owner (only
-        # committed records ever enter a buffer, so this cannot duplicate
-        # anything the broker will re-serve)
-        target = self.runtimes[alive[0]]
-        for rt in dead_rts:
-            orphan = rt.worker.buffer.drain()
-            if len(orphan):
-                with target.commit_lock:
-                    target.worker.buffer.push(orphan)
-        return self._rebalance_to(alive)
+        return self._remove_workers(list(names), forced=False)
+
+    def evict_workers(self, names: Iterable[str], *,
+                      lock_timeout: float = 1.0,
+                      join_timeout: float = 2.0) -> float:
+        """Forced eviction for hung/straggler workers (the control
+        plane's confirmed-failure path). Unlike ``fail_workers`` it must
+        not block on the victim: the commit lock is taken with a timeout
+        (a wedged load stage may never release it), the stage threads
+        get a bounded join (wedged ones are surfaced by
+        ``WorkerRuntime.join`` and left to no-op as daemons), and the
+        victim's consumer group is FENCED at the broker so a zombie
+        thread that wakes later cannot move offsets that now belong to a
+        survivor. Returns cache re-dump seconds."""
+        return self._remove_workers(list(names), forced=True,
+                                    lock_timeout=lock_timeout,
+                                    join_timeout=join_timeout)
+
+    def _remove_workers(self, names: List[str], *, forced: bool,
+                        lock_timeout: float = 1.0,
+                        join_timeout: float = 2.0) -> float:
+        with self._coord_lock:
+            dead_rts = []
+            for n in names:
+                rt = self.runtimes[n]
+                if forced:
+                    # hang-tolerant: a load stage wedged INSIDE its
+                    # commit critical section would deadlock a plain
+                    # `with`; flag the runtime dead regardless (a bool
+                    # write is GIL-atomic) — the group fence below keeps
+                    # any zombie commit out either way
+                    got = rt.commit_lock.acquire(timeout=lock_timeout)
+                    rt.dead = True
+                    if got:
+                        rt.commit_lock.release()
+                else:
+                    with rt.commit_lock:   # atomic vs the load stage
+                        rt.dead = True
+                rt.stop.set()
+                dead_rts.append(rt)
+            for rt in dead_rts:
+                if forced:
+                    rt.join(join_timeout)
+                    self.pipe.queue.fence_group(rt.worker.group)
+                else:
+                    rt.join()
+            alive = [n for n in self.runtimes if not self.runtimes[n].dead]
+            if not alive:
+                raise RuntimeError("all workers failed")
+            self.pipe.workers = [w for w in self.pipe.workers
+                                 if w.name not in names]
+            # replicated-buffer adoption: a survivor inherits the dead
+            # workers' late records before the rebalance; `_rebalance_to`
+            # then re-homes every buffered record to its partition's new
+            # owner (only committed records ever enter a buffer, so this
+            # cannot duplicate anything the broker will re-serve)
+            target = self.runtimes[alive[0]]
+            for rt in dead_rts:
+                orphan = rt.worker.buffer.drain()
+                if len(orphan):
+                    with target.commit_lock:
+                        target.worker.buffer.push(orphan)
+            return self._rebalance_to(alive)
+
+    def _spawn_worker(self) -> str:
+        """Create + start one fresh worker runtime (no partitions yet —
+        the caller rebalances). The runtimes dict is replaced, not
+        mutated, so lock-free iterators (health polls, idle checks)
+        never observe a resize mid-iteration."""
+        name = f"w{self._next_worker_idx}"
+        self._next_worker_idx += 1
+        w = self.pipe._new_worker(
+            name, self.pipe.workers[0].transformer.join_depth
+            if self.pipe.workers else 1)
+        w.partitions = []
+        self.pipe.workers.append(w)
+        rt = WorkerRuntime(w, self.pipe, self.cap)
+        self.runtimes = {**self.runtimes, name: rt}
+        if self._t_start is not None:
+            rt.start()
+        return name
 
     def scale_to(self, n_workers: int) -> float:
         """Elastic resize (paper §3.2 'cluster scales up or down') without
         stopping the running stream."""
-        alive = self.alive_workers()
-        if n_workers < len(alive):
-            return self.fail_workers(alive[n_workers:])
-        if n_workers == len(alive):
-            return 0.0
-        new_names = []
-        for _ in range(n_workers - len(alive)):
-            name = f"w{self._next_worker_idx}"
-            self._next_worker_idx += 1
-            w = self.pipe._new_worker(
-                name, self.pipe.workers[0].transformer.join_depth
-                if self.pipe.workers else 1)
-            w.partitions = []
-            self.pipe.workers.append(w)
-            rt = WorkerRuntime(w, self.pipe, self.cap)
-            self.runtimes[name] = rt
-            if self._t_start is not None:
-                rt.start()
-            new_names.append(name)
-        return self._rebalance_to(alive + new_names)
+        with self._coord_lock:
+            alive = self.alive_workers()
+            if n_workers < len(alive):
+                return self.fail_workers(alive[n_workers:])
+            if n_workers == len(alive):
+                return 0.0
+            new_names = [self._spawn_worker()
+                         for _ in range(n_workers - len(alive))]
+            return self._rebalance_to(alive + new_names)
+
+    def replace_worker(self, name: str, *,
+                       lock_timeout: float = 1.0,
+                       join_timeout: float = 2.0) -> str:
+        """Supervised restart: forcibly evict ``name`` and bring up a
+        fresh replacement in the SAME rebalance wave, so the grant path
+        re-hydrates the newcomer (cache dump from the compacted master
+        topics sets its watermarks; `_remove_workers` hands it — or a
+        survivor — the evicted buffer, and `_redistribute_buffers`
+        re-homes every late record). Spawning before evicting also
+        keeps the last-worker case legal: the rebalance always has a
+        live grant target. Returns the replacement's name."""
+        with self._coord_lock:
+            new_name = self._spawn_worker()
+            self._remove_workers([name], forced=True,
+                                 lock_timeout=lock_timeout,
+                                 join_timeout=join_timeout)
+            return new_name
 
     # -------------------------------------------------- adaptive repartition
     def retire_epochs(self) -> bool:
@@ -1003,7 +1242,7 @@ class ConcurrentCluster:
                 pending.append((rt, msg))
             for rt, msg in pending:
                 if not msg.ack.wait(10.0):
-                    raise RuntimeError(
+                    raise QuiesceTimeout(
                         f"reroute ack timeout for {rt.worker.name}")
                 stats = stats.merge(msg.stats)
             sp.put("workers", len(pending))
@@ -1042,6 +1281,10 @@ class ConcurrentCluster:
            transfer → surgical grant) and buffers re-home.
 
         Returns migration stats (also kept as ``last_migration``)."""
+        with self._coord_lock:
+            return self._repartition_body()
+
+    def _repartition_body(self) -> Dict:
         from repro.core.pipeline import CacheMigrationStats
         pipe = self.pipe
         self.retire_epochs()
@@ -1074,14 +1317,15 @@ class ConcurrentCluster:
         scaled routing table (a consistent-hash ring moves only ~1/n of
         the key space; the static modulus reshuffles nearly all of it),
         workers pre-migrate, publishers switch, ownership rebalances."""
-        pipe = self.pipe
-        assert n_partitions >= self.assignment.n_partitions
-        initial_rows = self._initial_cache_rows()
-        cur = pipe.current_routing()
-        new_table = pipe.strategy.scaled_table(cur, n_partitions)
-        for t in pipe.operational_topics:
-            pipe.queue.topics[t].expand(n_partitions)
-        self.assignment.grow(n_partitions)
-        stats = self._reroute_all(new_table)
-        self._rebalance_to(self.alive_workers())
-        return self._finish_migration(cur, stats, initial_rows)
+        with self._coord_lock:
+            pipe = self.pipe
+            assert n_partitions >= self.assignment.n_partitions
+            initial_rows = self._initial_cache_rows()
+            cur = pipe.current_routing()
+            new_table = pipe.strategy.scaled_table(cur, n_partitions)
+            for t in pipe.operational_topics:
+                pipe.queue.topics[t].expand(n_partitions)
+            self.assignment.grow(n_partitions)
+            stats = self._reroute_all(new_table)
+            self._rebalance_to(self.alive_workers())
+            return self._finish_migration(cur, stats, initial_rows)
