@@ -97,6 +97,16 @@ GATES: Dict[str, List[Tuple[str, str]]] = {
         ("gates.no_crash_loop", "bool"),
         ("detection.latency_s", "lower"),
     ],
+    "BENCH_shard_smoke.json": [
+        ("gates.complete", "bool"),
+        ("gates.parity_engine_bitwise", "bool"),
+        ("gates.parity_backend_bitwise", "bool"),
+        ("gates.tree_reduce_bitwise", "bool"),
+        ("gates.mesh_parity", "bool"),
+        ("gates.speedup_modeled_2", "higher"),
+        ("gates.speedup_modeled_4", "higher"),
+        ("gates.merge_overhead_fraction", "lower"),
+    ],
 }
 
 

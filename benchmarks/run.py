@@ -82,6 +82,13 @@ def main() -> None:
     from benchmarks import control_loop as CL
     emit("control", CL.summary(quick=args.quick))
 
+    # sharded serving plane: modeled fold-throughput scaling across
+    # simulated device shards + bitwise parity contracts (full sweep
+    # incl. the 4-device mesh drill:
+    # python -m benchmarks.shard_scaling -> BENCH_shard.json)
+    from benchmarks import shard_scaling as SH
+    emit("shard", SH.summary(quick=args.quick))
+
     # roofline summary (if the dry-run matrix has been produced)
     try:
         from benchmarks.roofline import load_cells, roofline_fraction

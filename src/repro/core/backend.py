@@ -588,6 +588,45 @@ class ComputeBackend:
         ``prefix_fold_reference``. Returns host ``[S, 1 + 3L]`` f32."""
         raise NotImplementedError
 
+    # ------------------------------------------------- device-mesh extension
+    mesh = None   # optional 1-D device mesh (axis "shards") — see set_mesh
+
+    def set_mesh(self, mesh) -> None:
+        """Attach a 1-D device mesh (single axis, one device per serving
+        shard) so ``fold_segments_sharded`` may run each shard's fold on
+        its own device via ``shard_map``. ``None`` detaches. Backends
+        without a device plane keep the host reference path; attaching a
+        mesh never changes WHAT is computed (bitwise contract below)."""
+        self.mesh = mesh
+
+    def fold_segments_sharded(self, seg_ids: np.ndarray, values: np.ndarray,
+                              n_segments: int, owners: np.ndarray,
+                              n_shards: int) -> np.ndarray:
+        """Shard-local delta folds for the sharded serving plane
+        (``repro.runtime.shard_plane``): shard ``k`` folds the FULL delta
+        with every segment it does not own masked to the -1 identity, so
+        nothing crosses shards on the write path. ``owners`` [n_segments]
+        int maps segment id -> owning shard. Returns the stacked host
+        tables ``[n_shards, n_segments, 1 + 3L]``.
+
+        Bitwise contract: the fold tree is elementwise per segment column
+        (a segment's fold never reads another segment's lanes — the
+        ``_fold_blocks`` compaction argument), so shard ``k``'s owned
+        columns are bitwise identical to the single-device
+        ``fold_segments`` columns, and its foreign columns are exactly
+        the ``empty_fold_state`` identity. Reference implementation: one
+        masked ``fold_segments`` per shard on the host."""
+        seg = np.asarray(seg_ids, np.int64)
+        owners = np.asarray(owners, np.int64)
+        vals = np.asarray(values, np.float32)
+        if vals.ndim == 1:
+            vals = vals[:, None]
+        in_range = (seg >= 0) & (seg < n_segments)
+        own = np.where(in_range, owners[np.clip(seg, 0, n_segments - 1)], -1)
+        return np.stack([
+            self.fold_segments(np.where(own == k, seg, -1), vals, n_segments)
+            for k in range(n_shards)])
+
     # -------------------------------------------------------------- helpers
     @staticmethod
     def _pad_bucket(prod: np.ndarray, floor: int = 1,
@@ -900,6 +939,103 @@ class JaxBackend(ComputeBackend):
         self.op_dispatches += 1
         self.host_syncs += 1
         return np.asarray(_prefix_fold_jnp(jnp.asarray(table)))[:S]
+
+    def set_mesh(self, mesh):
+        super().set_mesh(mesh)
+        self._mesh_fold = None if mesh is None else _make_mesh_fold(mesh)
+
+    def fold_segments_sharded(self, seg_ids, values, n_segments, owners,
+                              n_shards):
+        # mesh path: ONE shard_map dispatch per row block — every device
+        # folds the (replicated) block against its own ownership mask,
+        # device-local, no collectives. Falls back to the host reference
+        # (one masked fold_segments per shard) when no matching mesh is
+        # attached, so callers never branch.
+        mesh = self.mesh
+        if mesh is None or mesh.devices.size != n_shards:
+            return super().fold_segments_sharded(
+                seg_ids, values, n_segments, owners, n_shards)
+        import jax.numpy as jnp
+        seg = np.asarray(seg_ids, np.int64)
+        vals = np.asarray(values, np.float32)
+        if vals.ndim == 1:
+            vals = vals[:, None]
+        n, L = vals.shape
+        out = np.stack([empty_fold_state(n_segments, L)] * n_shards)
+        if n == 0:
+            return out
+        own_dev = jnp.asarray(np.asarray(owners, np.int64), jnp.int32)
+        # same <= FOLD_BLOCK chunking + pow2 identity padding as
+        # _fold_blocks, so per-column op order (and thus bytes) matches
+        # the single-device fold exactly; the mesh tree is uncompacted
+        # (static [block, n_segments] shape per device), which the
+        # compaction contract makes bitwise-invisible
+        for lo in range(0, n, FOLD_BLOCK):
+            s = seg[lo:lo + FOLD_BLOCK]
+            v = vals[lo:lo + FOLD_BLOCK]
+            m = len(s)
+            bucket = max(8, 1 << (m - 1).bit_length())
+            if bucket != m:
+                s = np.concatenate([s, np.full(bucket - m, -1, np.int64)])
+                v = np.concatenate([v, np.zeros((bucket - m, L), np.float32)])
+            self.op_dispatches += 1
+            self.host_syncs += 1
+            blk = np.asarray(self._mesh_fold(
+                jnp.asarray(s, jnp.int32), jnp.asarray(v), own_dev,
+                n_segments))
+            for k in range(n_shards):
+                out[k] = combine_fold(out[k], blk[k])
+        return out
+
+
+def _make_mesh_fold(mesh):
+    """Build the jitted ``shard_map`` fold for one mesh: each device runs
+    the SAME fixed halving tree as ``_fold_tree_jnp`` over the replicated
+    block, with segments not owned by ``axis_index(shards)`` masked to the
+    -1 identity first. Per owned segment column the op order is identical
+    to the single-device tree, so the stacked [n_shards, S, W] output is
+    bitwise the host reference (``ComputeBackend.fold_segments_sharded``).
+    The body issues NO collectives — merging shard tables is the read
+    path's explicit tree reduce, not the write path's job."""
+    import functools
+
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axis = mesh.axis_names[0]
+
+    @functools.partial(jax.jit, static_argnames=("n_segments",))
+    def fold(seg, vals, owners, n_segments):
+        def device_fold(seg, vals, owners):
+            k = jax.lax.axis_index(axis).astype(jnp.int32)
+            in_range = (seg >= 0) & (seg < n_segments)
+            owner = jnp.where(in_range,
+                              owners[jnp.clip(seg, 0, n_segments - 1)],
+                              jnp.int32(-1))
+            cseg = jnp.where(owner == k, seg, jnp.int32(-1))
+            onehot = cseg[:, None] == jnp.arange(n_segments,
+                                                 dtype=cseg.dtype)
+            oh = onehot.astype(jnp.float32)
+            cnt = oh
+            sums = oh[:, :, None] * vals[:, None, :]
+            mins = jnp.where(onehot[:, :, None], vals[:, None, :], jnp.inf)
+            maxs = jnp.where(onehot[:, :, None], vals[:, None, :], -jnp.inf)
+            while cnt.shape[0] > 1:
+                h = cnt.shape[0] // 2
+                cnt = cnt[:h] + cnt[h:]
+                sums = sums[:h] + sums[h:]
+                mins = jnp.minimum(mins[:h], mins[h:])
+                maxs = jnp.maximum(maxs[:h], maxs[h:])
+            table = jnp.concatenate(
+                [cnt[0][:, None], sums[0], mins[0], maxs[0]], axis=1)
+            return table[None]          # [1, S, W] -> stacked [K, S, W]
+        return shard_map(device_fold, mesh,
+                         in_specs=(P(), P(), P()),
+                         out_specs=P(axis))(seg, vals, owners)
+
+    return fold
 
 
 _ROLLUP_JIT = None

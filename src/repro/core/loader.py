@@ -53,6 +53,12 @@ class StarSchemaWarehouse:
         self._chunk_log: List[np.ndarray] = []   # committed blocks, in order
         self._lock = threading.Lock()
         self._serving = None                 # MaterializedViewEngine (opt.)
+        self._shards = None                  # ShardOwnership (opt.)
+        # per-shard chunk sub-logs, chunk-aligned: _shard_logs[k][i] holds
+        # chunk i's rows whose business key the ownership routes to shard
+        # k — maintained incrementally at commit time (the write path
+        # never moves rows across shards)
+        self._shard_logs: List[List[np.ndarray]] = []
         self.backend = backend       # pipeline's ComputeBackend (or None)
         self.rows_loaded = 0
         self.load_calls = 0
@@ -85,6 +91,78 @@ class StarSchemaWarehouse:
                 engine.publish(chunk)
             self._serving = engine
         return engine
+
+    # ------------------------------------------------------------- shard plane
+    def _split_chunk(self, block: np.ndarray) -> None:
+        """Lock-held: append one committed chunk's rows to the per-shard
+        sub-logs (business key = fact col 0, routed through the attached
+        ``ShardOwnership``). Row order within each shard's slice follows
+        the chunk's order, so concatenating every shard's slices and
+        canonical-sorting reproduces the chunk log byte-for-byte."""
+        owner = self._shards.shard_of_keys(block[:, 0].astype(np.int64))
+        for k in range(self._shards.n_shards):
+            self._shard_logs[k].append(block[owner == k])
+
+    def attach_shards(self, ownership) -> None:
+        """Wire a ``repro.runtime.shard_plane.ShardOwnership``: every
+        committed chunk is (and history retroactively gets) split into
+        per-shard sub-logs, so each mesh shard holds only the fact rows
+        of its owned business-key ranges. The primary chunk log — the
+        commit/durability source of truth — is untouched; the split is a
+        derived placement, which is what keeps the warehouse
+        byte-identical to the unsharded one by construction."""
+        with self._lock:
+            self._shards = ownership
+            self._shard_logs = [[] for _ in range(ownership.n_shards)]
+            for chunk in self._chunk_log:
+                self._split_chunk(chunk)
+
+    def reown_shards(self, ownership) -> Dict:
+        """Surgical re-split for a new routing epoch (the warehouse twin
+        of ``ShardedViewEngine.reown``): chunks whose rows all keep their
+        owner are left alone — only chunks containing a moved key have
+        their per-shard slices rebuilt. Returns {chunks_resplit,
+        rows_moved}. No-op unless shards are attached."""
+        with self._lock:
+            old = self._shards
+            if old is None:
+                return {"chunks_resplit": 0, "rows_moved": 0}
+            K = ownership.n_shards
+            if K != old.n_shards:
+                raise ValueError(
+                    f"reown_shards: shard count is fixed for the plane's "
+                    f"lifetime ({old.n_shards} != {K}); detach and "
+                    f"attach_shards to resize")
+            resplit = 0
+            moved_rows = 0
+            for i, chunk in enumerate(self._chunk_log):
+                keys = chunk[:, 0].astype(np.int64)
+                ow_new = ownership.shard_of_keys(keys)
+                moved = int((old.shard_of_keys(keys) != ow_new).sum())
+                if not moved:
+                    continue
+                resplit += 1
+                moved_rows += moved
+                for k in range(K):
+                    self._shard_logs[k][i] = chunk[ow_new == k]
+            self._shards = ownership
+            return {"chunks_resplit": resplit, "rows_moved": moved_rows}
+
+    def shard_fact_table(self, shard: int) -> np.ndarray:
+        """One shard's resident fact rows (its owned business-key ranges
+        only), in commit order."""
+        with self._lock:
+            chunks = [c for c in self._shard_logs[shard] if len(c)]
+            if not chunks:
+                return np.zeros((0, len(FACT_COLUMNS)), np.float32)
+            return np.concatenate(chunks)
+
+    def shard_rows(self) -> List[int]:
+        """[n_shards] resident row counts — the warehouse-side imbalance
+        signal."""
+        with self._lock:
+            return [int(sum(len(c) for c in log))
+                    for log in self._shard_logs]
 
     # ------------------------------------------------------------- durability
     def export_state(self, from_seq: int = 0) -> Dict:
@@ -132,6 +210,8 @@ class StarSchemaWarehouse:
         aggregate, publish the delta (stamped with the routing epoch the
         records were processed under, for migration observability)."""
         self._chunk_log.append(block)
+        if self._shards is not None:
+            self._split_chunk(block)
         self.commit_seq += 1
         if rollup is not None:
             if self._kpi_running is None:

@@ -587,6 +587,14 @@ class DODETLPipeline:
                     self.queue.topics[t].set_routing(new_table)
                 for w in self.workers:
                     w.set_pending_tables(())
+            # sharded serving plane: shard ownership follows the routing
+            # epoch — only moved segments/warehouse chunks migrate (the
+            # mesh twin of the workers' surgical cache migration)
+            srv = self.warehouse._serving
+            if srv is not None and hasattr(srv, "reown"):
+                with self.tracer.span("repartition.shard_reown"):
+                    srv.reown(new_table)
+                    self.warehouse.reown_shards(srv.ownership)
             # mid-repartition crash seam: new epoch published, ownership
             # not yet rebalanced — the hardest recovery window (a restart
             # must resume with the new epoch live AND re-run the rebalance)

@@ -7,9 +7,59 @@ tests and benchmarks see the real single CPU device.
 """
 from __future__ import annotations
 
+import os
+import sys
 from typing import Optional, Tuple
 
 import jax
+
+_FORCE_FLAG = "--xla_force_host_platform_device_count"
+
+
+def jax_initialized() -> bool:
+    """True iff the jax runtime has already created a backend client.
+
+    Probes ``jax._src.xla_bridge``'s backend cache without triggering
+    initialization itself (calling ``jax.devices()`` here would *cause*
+    the very initialization we are trying to detect).
+    """
+    xb = getattr(getattr(jax, "_src", None), "xla_bridge", None)
+    if xb is None:                       # private layout moved: assume the
+        return True                      # worst so callers fail loudly
+    for attr in ("_backends", "_default_backend"):
+        state = getattr(xb, attr, None)
+        if state:
+            return True
+    return False
+
+
+def virtual_devices(n: int) -> int:
+    """Force ``n`` virtual host (CPU) devices so tests/benchmarks can build
+    a >= 4-device mesh on one machine.
+
+    Appends ``--xla_force_host_platform_device_count=n`` to ``XLA_FLAGS``.
+    The flag is only read at jax backend initialization, so this MUST run
+    before anything touches jax device state; if jax is already initialized
+    the flag would be silently ignored — we refuse with a clear error
+    instead (callers then re-exec in a subprocess with the env var set,
+    the way ``tests/test_shard_plane.py`` drills the 4-device mesh).
+
+    Returns ``n`` so call sites can assert the requested count.
+    """
+    if n < 1:
+        raise ValueError(f"virtual_devices({n}): need n >= 1")
+    if jax_initialized():
+        raise RuntimeError(
+            "virtual_devices(%d): jax is already initialized in this "
+            "process, so %s would be ignored. Set "
+            "XLA_FLAGS=%s=%d in the environment and re-exec (or run the "
+            "caller in a fresh subprocess) before jax is imported."
+            % (n, _FORCE_FLAG, _FORCE_FLAG, n))
+    flags = os.environ.get("XLA_FLAGS", "")
+    kept = [f for f in flags.split() if not f.startswith(_FORCE_FLAG + "=")]
+    kept.append(f"{_FORCE_FLAG}={n}")
+    os.environ["XLA_FLAGS"] = " ".join(kept)
+    return n
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,6 +73,12 @@ def make_production_mesh(*, multi_pod: bool = False):
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Arbitrary mesh (tests use e.g. (2, 2) with 4 forced host devices)."""
     return jax.make_mesh(shape, axes)
+
+
+def make_shard_mesh(n_shards: int):
+    """1-D serving-plane mesh: one axis named "shards", one device per
+    warehouse/view shard (``repro.runtime.shard_plane``)."""
+    return jax.make_mesh((n_shards,), ("shards",))
 
 
 def mesh_devices(mesh) -> int:

@@ -72,14 +72,28 @@ class ShardingCtx:
     def spec(self, axes: Sequence[Optional[str]]) -> P:
         return P(*(self.rules.get(a, None) for a in axes))
 
+    @property
+    def _axis_sizes(self) -> Dict[str, int]:
+        """{mesh axis name: size}, computed ONCE per ctx. The mesh is
+        immutable for the ctx's lifetime, but ``spec_for_shape`` runs per
+        tensor per call site — rebuilding this dict per axis there was
+        measurable pure waste."""
+        cached = self.__dict__.get("_axis_sizes_cache")
+        if cached is None:
+            cached = {} if self.mesh is None else \
+                dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+            self.__dict__["_axis_sizes_cache"] = cached
+        return cached
+
     def _axis_size(self, mesh_axes) -> int:
         if mesh_axes is None:
             return 1
         if isinstance(mesh_axes, str):
             mesh_axes = (mesh_axes,)
+        sizes = self._axis_sizes
         size = 1
         for a in mesh_axes:
-            size *= dict(zip(self.mesh.axis_names, self.mesh.devices.shape))[a]
+            size *= sizes[a]
         return size
 
     def spec_for_shape(self, axes: Sequence[Optional[str]],

@@ -43,6 +43,12 @@ Schema (``build_cluster_health``)::
                     "evictions", "restarts", "dead_lettered", ...} —
                     ControlPlane.snapshot() when a control plane is
                     attached, a static same-shape stub otherwise,
+      "mesh":      sharded serving plane: {"n_shards", "device_mesh",
+                    "routing_epoch", "fold_rows", "fold_rows_imbalance",
+                    "owned_segments", "merge": {bytes, dispatches},
+                    "reowns", "segments_moved"} — ShardedViewEngine's
+                    mesh_report() when sharded, a same-shape stub
+                    otherwise,
       "counters":  merged registry counters (pipeline + process-global),
     }
 """
@@ -151,6 +157,19 @@ def build_cluster_health(cluster) -> Dict:
                    "pending_deltas": engine.pending(),
                    "data_age_ms": round(snap.staleness_ms(), 3)}
 
+    # sharded serving plane: per-shard fold rows / owned segments /
+    # merge traffic (the shard-imbalance signal the control plane's
+    # observation vector consumes); a same-shape stub when the engine is
+    # unsharded, following the `control` stub idiom below
+    if engine is not None and hasattr(engine, "mesh_report"):
+        mesh = engine.mesh_report()
+    else:
+        mesh = {"n_shards": 1, "device_mesh": False, "routing_epoch": 0,
+                "fold_rows": [], "fold_rows_imbalance": 1.0,
+                "owned_segments": {}, "merge": {"bytes": 0,
+                                                "dispatches": 0},
+                "reowns": 0, "segments_moved": 0}
+
     # control plane: the supervisor/controller's own snapshot when one is
     # attached; a same-shape stub otherwise so consumers (and the
     # controller's own drills) never branch on schema
@@ -191,6 +210,7 @@ def build_cluster_health(cluster) -> Dict:
                       if cluster.last_migration else None},
         "checkpoint": checkpoint,
         "control": control,
+        "mesh": mesh,
         "counters": merged_counters(pipe),
     }
 

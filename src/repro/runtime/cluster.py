@@ -718,6 +718,13 @@ class ConcurrentCluster:
             # the pipeline registry's "serving" shard
             self.serving.tracer = pipe.tracer
             self.serving.attach_metrics(pipe.metrics.shard("serving"))
+            # sharded serving plane (ShardedViewEngine): align shard
+            # ownership with the pipeline's live routing epoch and give
+            # the warehouse its per-shard sub-logs; repartition() keeps
+            # both in sync via _reown_shard_plane
+            if hasattr(self.serving, "reown"):
+                self.serving.reown(pipe.current_routing())
+                pipe.warehouse.attach_shards(self.serving.ownership)
         self.runtimes: Dict[str, WorkerRuntime] = {
             w.name: WorkerRuntime(w, pipe, max_records_per_partition)
             for w in pipe.workers}
@@ -1251,7 +1258,22 @@ class ConcurrentCluster:
             for t in pipe.operational_topics:
                 pipe.queue.topics[t].set_routing(new_table)
             sp.put("epoch", new_table.epoch)
+        self._reown_shard_plane(new_table)
         return stats
+
+    def _reown_shard_plane(self, new_table) -> None:
+        """Sharded serving plane: remap view-segment and warehouse-row
+        shard ownership to the new routing epoch, surgically (only moved
+        segments/chunks migrate — the mesh twin of the workers' surgical
+        cache migration above). No-op for an unsharded engine."""
+        eng = self.serving
+        if eng is None or not hasattr(eng, "reown"):
+            return
+        with self.pipe.tracer.span("repartition.shard_reown") as sp:
+            stats = eng.reown(new_table)
+            wstats = self.pipe.warehouse.reown_shards(eng.ownership)
+            sp.put("segments_moved", stats["segments_moved"])
+            sp.put("warehouse_rows_moved", wstats["rows_moved"])
 
     def _finish_migration(self, cur, stats, initial_rows) -> Dict:
         from repro.core.pipeline import migration_summary

@@ -142,15 +142,37 @@ class QueryPlan:
         computation per distinct report (epoch-memoized, so a second
         batch on the same epoch recomputes nothing). Columnar out."""
         snap = rsnap.snap
+        # sharded serving plane: when the snapshot carries shard-local
+        # tables (ShardedEpochSnapshot), each query descriptor routes to
+        # its segment's OWNING shard — one gather dispatch per shard with
+        # resident queries, against that shard's local table. Owned rows
+        # are bitwise-identical to the merged table's, so the scattered
+        # answers are bitwise the unsharded dispatch (duck-typed: no
+        # runtime import, plain snapshots take the single-dispatch path).
+        shard_states = getattr(snap, "shard_states", None)
+        seg_owners = getattr(snap, "seg_owners", None)
         point_stats: Dict[int, np.ndarray] = {}
         for vid, (pos, units) in self.point_groups.items():
-            st = snap.view(self.views[vid])
+            name = self.views[vid]
+            st = snap.view(name)
             if len(units) and (units.min() < 0
                                or units.max() >= st.spec.n_segments):
                 raise ValueError(
-                    f"unit ids out of range for view {self.views[vid]!r}")
-            point_stats[vid] = rsnap.backend.batch_gather_stats(
-                st.table, units)
+                    f"unit ids out of range for view {name!r}")
+            if shard_states and name in shard_states and len(units):
+                tabs = shard_states[name]
+                owner_u = np.asarray(seg_owners[name],
+                                     np.int64)[units]
+                out = np.empty((len(units), 1 + 4 * st.spec.n_lanes),
+                               np.float32)
+                for k in np.unique(owner_u):
+                    mask = owner_u == k
+                    out[mask] = rsnap.backend.batch_gather_stats(
+                        tabs[int(k)], units[mask])
+                point_stats[vid] = out
+            else:
+                point_stats[vid] = rsnap.backend.batch_gather_stats(
+                    st.table, units)
         shared: List[object] = [None] * (max(self._shared_map.values()) + 1
                                          if self._shared_map else 0)
         for code, vid, arg in self.shared_keys:

@@ -44,6 +44,11 @@ class ViewSpec:
     windowed: bool = False   # segments are ordered time windows: cumulative
                              # prefix reads make sense and the engine may
                              # fold deltas via the scan-form op
+    key_aligned: bool = False  # segment id IS the business key (fact col 0):
+                               # a sharded plane may place each segment on
+                               # the shard that owns its RoutingTable
+                               # partition, so folds stay shard-local and
+                               # ownership migrates with repartition()
 
     @property
     def n_lanes(self) -> int:
@@ -62,7 +67,8 @@ def oee_by_equipment(n_units: int) -> ViewSpec:
         name="oee_by_equipment", n_segments=n_units,
         lanes=("availability", "performance", "quality", "oee"),
         segments=lambda f: f[:, 0].astype(np.int64),
-        values=lambda f: _cols(f, slice(3, 7)))
+        values=lambda f: _cols(f, slice(3, 7)),
+        key_aligned=True)
 
 
 def kpi_by_unit_shift(n_units: int, n_shifts: int = 3,
@@ -89,7 +95,8 @@ def downtime_by_equipment(n_units: int) -> ViewSpec:
         name="downtime_by_equipment", n_segments=n_units,
         lanes=("downtime_s", "uptime_s"),
         segments=lambda f: f[:, 0].astype(np.int64),
-        values=lambda f: _cols(f, [8, 7]))
+        values=lambda f: _cols(f, [8, 7]),
+        key_aligned=True)
 
 
 def production_rate_windows(n_windows: int = 32,

@@ -1,0 +1,442 @@
+"""Sharded multi-device serving-plane drills (ROADMAP item 1).
+
+The contract under test: sharding is INVISIBLE to the numbers. On any
+shard count — host-simulated or a real ≥4-device mesh — the warehouse
+stays byte-identical and every materialized-view aggregate bitwise-
+identical to the single-device path, including across a live mid-run
+``repartition()`` (surgical shard-ownership remap) and across a
+checkpoint/crash/recovery drill (per-shard fold state captured and
+restored). The mechanism making that possible is segment-column
+ownership: every shard folds the full delta with foreign segments
+masked to the -1 identity, so a segment's combine order never changes
+(see ``repro.runtime.shard_plane``).
+
+The real-mesh drill runs in a SUBPROCESS: jax backends bind device
+count at first initialization, so ``--xla_force_host_platform_device_
+count`` must be set before jax imports — the pytest process is already
+initialized (same pattern as the kill -9 drill in recovery_bench).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.configs.dod_etl import steelworks_config
+from repro.core import DODETLPipeline, SourceDatabase
+from repro.core.backend import available_backends
+from repro.data.sampler import SamplerConfig, SteelworksSampler
+from repro.durability import (DurabilityJournal, FaultInjector,
+                              InjectedCrash, RecoveryCoordinator,
+                              recover_pipeline)
+from repro.durability.faults import COMMIT_POST, REPARTITION_MID
+from repro.runtime.cluster import ConcurrentCluster
+from repro.runtime.shard_plane import ShardedViewEngine, owner_gather
+from repro.serving.engine import MaterializedViewEngine
+from repro.serving.views import steelworks_views
+
+BACKENDS = [b for b in ("numpy", "jax") if b in available_backends()]
+SHARD_COUNTS = (1, 2, 4)
+
+
+# --------------------------------------------------------------------- harness
+def _workload(backend="numpy", n=400, n_partitions=4, zipf_s=0.0,
+              strategy="static", seed=0):
+    cfg = steelworks_config(n_partitions=n_partitions, backend=backend,
+                            partition_strategy=strategy)
+    cfg = dataclasses.replace(cfg, buffer_capacity=4096)
+    src = SourceDatabase()
+    SteelworksSampler(cfg, SamplerConfig(
+        records_per_table=n, n_equipment=n_partitions,
+        late_master_frac=0.15, zipf_s=zipf_s, seed=seed)).generate(src)
+    return cfg, src
+
+
+def _sharded_engine(cfg, n_shards, backend="numpy"):
+    return ShardedViewEngine(steelworks_views(cfg.n_business_keys),
+                             n_shards=n_shards, backend=backend)
+
+
+def _extraction_lag(pipe):
+    log = pipe.source.log
+    return sum(max(0, log.next_lsn - l.offset)
+               for l in pipe.tracker.listeners)
+
+
+def _drill_loop(pipe, engine, coord=None, ckpt_every=2, extract_per=60,
+                repartition_at=None, cap=40, max_steps=300):
+    """test_recovery's deterministic state-driven loop: bounded extract,
+    state-derived repartition trigger, micro-batch step, fold, maybe
+    checkpoint."""
+    steps = stalls = 0
+    while steps < max_steps:
+        steps += 1
+        pipe.extract(extract_per)
+        if repartition_at is not None \
+                and pipe.current_routing().epoch == 0 \
+                and pipe.warehouse.commit_seq >= repartition_at:
+            pipe.repartition()
+        n = pipe.step(cap)
+        engine.fold_pending()
+        if coord is not None and steps % ckpt_every == 0:
+            coord.checkpoint(pipe, engine=engine)
+        if _extraction_lag(pipe) > 0:
+            stalls = 0
+            continue
+        if n == 0 and sum(len(w.buffer) for w in pipe.workers) == 0:
+            break
+        stalls = stalls + 1 if n == 0 else 0
+        if stalls >= 3:
+            break
+    return steps
+
+
+def _final_state(pipe, engine):
+    snap = engine.snapshot()
+    return {
+        "facts": pipe.warehouse.canonical_fact_table().tobytes(),
+        "rows": pipe.warehouse.rows_loaded,
+        "seq": pipe.warehouse.commit_seq,
+        "views": {n: st.table.tobytes() for n, st in snap.states.items()},
+        "rows_folded": snap.rows_folded,
+        "deltas_folded": snap.deltas_folded,
+    }
+
+
+def _assert_identical(got, want):
+    assert got["rows"] == want["rows"]
+    assert got["seq"] == want["seq"]
+    assert got["facts"] == want["facts"]
+    assert got["rows_folded"] == want["rows_folded"]
+    assert got["deltas_folded"] == want["deltas_folded"]
+    for name, table in want["views"].items():
+        assert got["views"][name] == table, name
+
+
+def _run_pair(n_shards, backend="numpy", repartition_at=None, **wl):
+    """One workload through the SHARDED engine and the plain single-
+    device engine, identically driven. Returns (sharded final state,
+    plain final state, sharded pipe, sharded engine)."""
+    cfg, src = _workload(backend=backend, **wl)
+    pipe = DODETLPipeline(cfg, src, n_workers=2)
+    eng = _sharded_engine(cfg, n_shards, backend)
+    eng.reown(pipe.current_routing())
+    pipe.warehouse.attach_serving(eng)
+    pipe.warehouse.attach_shards(eng.ownership)
+    _drill_loop(pipe, eng, repartition_at=repartition_at)
+
+    cfg2, src2 = _workload(backend=backend, **wl)
+    pipe2 = DODETLPipeline(cfg2, src2, n_workers=2)
+    ref = MaterializedViewEngine(steelworks_views(cfg2.n_business_keys),
+                                 backend=backend)
+    pipe2.warehouse.attach_serving(ref)
+    _drill_loop(pipe2, ref, repartition_at=repartition_at)
+    return _final_state(pipe, eng), _final_state(pipe2, ref), pipe, eng
+
+
+def _assert_warehouse_shards_partition(pipe, eng):
+    """The per-shard sub-logs are a partition of the chunk log: their
+    union, canonically sorted, is byte-identical to the warehouse's own
+    canonical fact table, and each shard holds ONLY its owned keys."""
+    wh = pipe.warehouse
+    parts = [wh.shard_fact_table(k) for k in range(eng.n_shards)]
+    union = np.concatenate([p for p in parts if len(p)]) \
+        if any(len(p) for p in parts) \
+        else np.zeros((0, 10), np.float32)
+    canon = union[np.lexsort(union.T[::-1])] if len(union) else union
+    assert canon.tobytes() == wh.canonical_fact_table().tobytes()
+    for k, p in enumerate(parts):
+        if len(p):
+            owners = eng.ownership.shard_of_keys(p[:, 0].astype(np.int64))
+            assert (owners == k).all()
+
+
+# ------------------------------------------------------------------ parity
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("n_shards", SHARD_COUNTS)
+def test_sharded_parity_bitwise(n_shards, backend):
+    """1/2/4 shards: byte-identical warehouse facts, bitwise-identical
+    view fold state vs the single-device engine, per-shard warehouse
+    sub-logs partition the chunk log exactly."""
+    got, want, pipe, eng = _run_pair(n_shards, backend=backend)
+    _assert_identical(got, want)
+    _assert_warehouse_shards_partition(pipe, eng)
+
+
+@pytest.mark.parametrize("n_shards", (2, 4))
+def test_sharded_parity_across_repartition(n_shards):
+    """Mid-run repartition() under a zipf-skewed workload with the
+    skew-aware strategy: the routing-epoch switch remaps shard ownership
+    surgically and the final state stays bitwise-identical to the
+    single-device run (which repartitions identically)."""
+    wl = dict(n=500, zipf_s=1.2, strategy="skew")
+    got, want, pipe, eng = _run_pair(n_shards, repartition_at=3, **wl)
+    assert pipe.current_routing().epoch >= 1      # it really switched
+    _assert_identical(got, want)
+    _assert_warehouse_shards_partition(pipe, eng)
+    rep = eng.mesh_report()
+    assert rep["reowns"] >= 1                     # ownership remapped
+    assert rep["routing_epoch"] == pipe.current_routing().epoch
+
+
+def test_tree_reduce_merge_equals_owner_gather():
+    """The explicit pairwise-halving tree reduce over shard-local tables
+    is bitwise-equal to the authoritative owner-gather merge (and hence
+    to the single-device table) on the KPI domain."""
+    got, want, pipe, eng = _run_pair(4)
+    snap = eng.snapshot()
+    for spec in eng.specs:
+        reduced = eng.tree_reduced_table(spec.name)
+        gathered = owner_gather(snap.shard_states[spec.name],
+                                snap.seg_owners[spec.name])
+        assert reduced.tobytes() == gathered.tobytes(), spec.name
+        assert reduced.tobytes() == want["views"][spec.name], spec.name
+
+
+def test_shard_routed_batch_gather_bitwise():
+    """The batched read path routes each point query to its owning shard
+    (one gather dispatch per shard) and the answers are bitwise the
+    unsharded single-dispatch answers."""
+    from repro.serving.batch import ReportQuery, compile_queries
+    from repro.serving.server import ReportServer
+
+    got, want, pipe, eng = _run_pair(4)
+    cfg2, src2 = _workload()
+    pipe2 = DODETLPipeline(cfg2, src2, n_workers=2)
+    ref = MaterializedViewEngine(steelworks_views(cfg2.n_business_keys))
+    pipe2.warehouse.attach_serving(ref)
+    _drill_loop(pipe2, ref)
+
+    queries = [ReportQuery("oee", unit=int(u))
+               for u in range(cfg2.n_business_keys)] \
+        + [ReportQuery("oee"), ReportQuery("top_downtime", k=3),
+           ReportQuery("kpi_rollup"), ReportQuery("production_rate"),
+           ReportQuery("shift_report")]
+    plan = compile_queries(queries)
+    res_sharded = plan.execute(ReportServer(eng).snapshot())
+    res_plain = plan.execute(ReportServer(ref).snapshot())
+    reps_s, reps_p = res_sharded.reports(), res_plain.reports()
+    assert len(reps_s) == len(reps_p) == len(queries)
+    for a, b in zip(reps_s, reps_p):
+        assert a.view == b.view
+        assert set(a.data) == set(b.data), a.view
+        for key, va in a.data.items():
+            vb = b.data[key]
+            if isinstance(va, np.ndarray):
+                assert va.tobytes() == vb.tobytes(), (a.view, key)
+            else:
+                assert va == vb, (a.view, key)
+
+
+# -------------------------------------------------------- checkpoint/recovery
+@pytest.mark.parametrize("point,ordinal", [(COMMIT_POST, 5),
+                                           (REPARTITION_MID, 1)])
+def test_sharded_checkpoint_recovery_drill(tmp_path, point, ordinal):
+    """Crash mid-stream (and mid-repartition) with a SHARDED engine on
+    both sides: checkpoints capture per-shard fold state, recovery
+    restores it onto a sharded engine, and the finished run is
+    byte-identical to the uninterrupted sharded run — which is itself
+    bitwise-identical to the single-device oracle (test above)."""
+    wl = dict(n=500, zipf_s=1.2, strategy="skew")
+    repartition_at = 3
+    want, _, _, _ = _run_pair(2, repartition_at=repartition_at, **wl)
+
+    cfg, src = _workload(**wl)
+    fault = FaultInjector({point: ordinal})
+    pipe = DODETLPipeline(cfg, src, n_workers=2, fault=fault)
+    eng = _sharded_engine(cfg, 2)
+    eng.reown(pipe.current_routing())
+    pipe.warehouse.attach_serving(eng)
+    pipe.warehouse.attach_shards(eng.ownership)
+    journal = DurabilityJournal(str(tmp_path))
+    coord = RecoveryCoordinator(journal)
+    with pytest.raises(InjectedCrash):
+        _drill_loop(pipe, eng, coord=coord, repartition_at=repartition_at)
+
+    eng2 = _sharded_engine(cfg, 2)
+    pipe2, coord2, info = recover_pipeline(
+        cfg, src, DurabilityJournal(str(tmp_path)), engine=eng2,
+        n_workers=2)
+    assert info is not None
+    eng2.reown(pipe2.current_routing())
+    pipe2.warehouse.attach_shards(eng2.ownership)
+    _drill_loop(pipe2, eng2, coord=coord2, repartition_at=repartition_at)
+    _assert_identical(_final_state(pipe2, eng2), want)
+    _assert_warehouse_shards_partition(pipe2, eng2)
+
+
+def test_export_captures_per_shard_state_and_restores_cross_shape():
+    """export_fold_state carries the per-shard tables + ownership; a
+    restore onto a matching engine adopts them directly, and a restore
+    onto a DIFFERENT shard count re-derives exact shard placement from
+    the merged tables (owned columns merged, foreign identity)."""
+    got, want, pipe, eng = _run_pair(4)
+    state = eng.export_fold_state()
+    assert state["shard"]["n_shards"] == 4
+    for spec in eng.specs:
+        stacked = state["shard"]["tables"][spec.name]
+        assert stacked.shape[0] == 4
+        owners = state["shard"]["seg_owners"][spec.name]
+        merged = owner_gather(list(stacked), owners)
+        assert merged.tobytes() == state["tables"][spec.name].tobytes()
+
+    for k2 in (2, 4):                       # same and different shape
+        eng2 = ShardedViewEngine(eng.specs, n_shards=k2,
+                                 router=eng.ownership.router)
+        eng2.restore_fold_state(state)
+        snap = eng2.snapshot()
+        for spec in eng.specs:
+            assert snap.view(spec.name).table.tobytes() \
+                == want["views"][spec.name], (k2, spec.name)
+            gathered = owner_gather(snap.shard_states[spec.name],
+                                    snap.seg_owners[spec.name])
+            assert gathered.tobytes() == want["views"][spec.name]
+
+
+# ----------------------------------------------------------------- cluster
+def test_cluster_wires_sharded_plane_and_health_mesh_block():
+    """ConcurrentCluster with a ShardedViewEngine: ownership aligns to
+    the live routing epoch, the warehouse gets shard sub-logs, and
+    health() exposes the mesh block (shard imbalance observation)."""
+    cfg, src = _workload(n=600, n_partitions=8)
+    pipe = DODETLPipeline(cfg, src, n_workers=2)
+    eng = _sharded_engine(cfg, 2)
+    pipe.extract()
+    cluster = ConcurrentCluster(pipe, poll_cdc=False, serving=eng)
+    cluster.start()
+    cluster.run_until_idle(timeout=60)
+    cluster.stop_all()
+    eng.fold_pending()
+    h = cluster.health()
+    assert h["mesh"]["n_shards"] == 2
+    assert sum(h["mesh"]["fold_rows"]) > 0
+    assert h["mesh"]["merge"]["dispatches"] > 0
+    assert any(k.startswith("shard.fold_rows") for k in h["counters"])
+    _assert_warehouse_shards_partition(pipe, eng)
+
+    # unsharded engines get the same-shape stub
+    cfg2, src2 = _workload(n=100)
+    pipe2 = DODETLPipeline(cfg2, src2, n_workers=1)
+    cluster2 = ConcurrentCluster(
+        pipe2, poll_cdc=False,
+        serving=MaterializedViewEngine(
+            steelworks_views(cfg2.n_business_keys)))
+    h2 = cluster2.health()
+    assert h2["mesh"]["n_shards"] == 1 and not h2["mesh"]["device_mesh"]
+
+
+# ------------------------------------------------------------- real mesh
+_MESH_DRILL = textwrap.dedent("""
+    import numpy as np
+    from repro.launch.mesh import virtual_devices, make_shard_mesh
+    virtual_devices(4)                      # before any jax device state
+    import jax
+    assert jax.device_count() >= 4, jax.device_count()
+
+    from repro.core.backend import get_backend
+    from repro.runtime.shard_plane import ShardedViewEngine
+    from repro.serving.engine import MaterializedViewEngine
+    from repro.serving.views import steelworks_views
+
+    rng = np.random.default_rng(3)
+    n_units = 16
+    specs = steelworks_views(n_units)
+
+    def mkdelta(n):
+        f = np.zeros((n, 10), np.float32)
+        f[:, 0] = rng.integers(0, n_units, n)
+        f[:, 1] = rng.uniform(0, 10000, n)
+        f[:, 2] = f[:, 1] + rng.uniform(1, 50, n)
+        f[:, 3:7] = rng.uniform(0, 1, (n, 4))
+        f[:, 7] = rng.uniform(0, 40, n)
+        f[:, 8] = rng.uniform(0, 10, n)
+        f[:, 9] = (rng.uniform(0, 1, n) > 0.1).astype(np.float32)
+        return f
+
+    be = get_backend("jax")
+    eng = ShardedViewEngine(specs, n_shards=4, backend="jax")
+    ref = MaterializedViewEngine(specs, backend="jax")
+    be.set_mesh(make_shard_mesh(4))         # folds now run shard_map
+    try:
+        for _ in range(6):
+            d = mkdelta(int(rng.integers(100, 2500)))
+            eng.publish(d); ref.publish(d)
+            eng.fold_pending(); ref.fold_pending()
+    finally:
+        be.set_mesh(None)
+    s, r = eng.snapshot(), ref.snapshot()
+    rep = eng.mesh_report()
+    for spec in specs:
+        assert s.view(spec.name).table.tobytes() \\
+            == r.view(spec.name).table.tobytes(), spec.name
+    print("MESH_PARITY_OK", jax.device_count())
+""")
+
+
+@pytest.mark.skipif("jax" not in BACKENDS, reason="jax not available")
+def test_real_mesh_4device_bitwise_parity():
+    """On a REAL simulated 4-device mesh (forced host devices, shard_map
+    dispatch per fold block) the sharded engine's published state is
+    bitwise-identical to the single-device jax engine."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)              # the drill sets its own
+    env["JAX_PLATFORMS"] = "cpu"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                     "src") + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", _MESH_DRILL], env=env,
+                         capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "MESH_PARITY_OK" in out.stdout
+
+
+def test_virtual_devices_refuses_when_jax_initialized():
+    """virtual_devices must refuse (clear error, not a silent no-op) in
+    a process whose jax runtime is already initialized — the forcing
+    flag would be ignored."""
+    import jax
+
+    from repro.launch.mesh import virtual_devices
+
+    jax.devices()                           # ensure initialized
+    with pytest.raises(RuntimeError, match="already initialized"):
+        virtual_devices(4)
+
+
+# -------------------------------------------------- sharding ctx satellites
+def test_sharding_ctx_axis_sizes_computed_once():
+    """The {axis: size} map is built once per ctx, not per _axis_size
+    call (the satellite fix), and spec_for_shape still drops mesh axes
+    for too-small dims."""
+    from repro.models.sharding import ShardingCtx
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.zeros((4, 2))
+
+    ctx = ShardingCtx(mesh=FakeMesh())
+    first = ctx._axis_sizes
+    assert first == {"data": 4, "model": 2}
+    assert ctx._axis_sizes is first          # cached, same object
+    assert ctx._axis_size("data") == 4
+    assert ctx._axis_size(("data", "model")) == 8
+    assert ctx._axis_sizes is first
+
+
+def test_spec_for_shape_still_drops_too_small_dims():
+    from repro.models.sharding import ShardingCtx, default_rules
+
+    class FakeMesh:
+        axis_names = ("data", "model")
+        devices = np.zeros((4, 2))
+
+    ctx = ShardingCtx(mesh=FakeMesh(), rules=default_rules())
+    # batch -> "data" (size 4): a dim of 2 is too small, 8 is fine
+    assert ctx.spec_for_shape(("batch", None), (2, 16))[0] is None
+    assert ctx.spec_for_shape(("batch", None), (8, 16))[0] == "data"
+    # heads -> "model" (size 2): 1 too small, 2 kept
+    assert ctx.spec_for_shape(("heads",), (1,))[0] is None
+    assert ctx.spec_for_shape(("heads",), (2,))[0] == "model"
